@@ -1,0 +1,95 @@
+//! Ablation bench: the paper's two-pointer pairing vs closest-gap-first
+//! matching, per rounding size — pairs found, total snap error, and
+//! end accuracy. Answers "is the greedy walk the right design choice?"
+//! (DESIGN.md §5, Fig 5/6 implementation detail).
+//!
+//! Run: `cargo bench --bench ablation_matching`
+
+use subaccel::accel::{
+    pair_filter, pair_filter_closest_first, total_snap_error, LayerPairing,
+};
+use subaccel::data::{load_dataset, load_weights};
+use subaccel::nn::lenet5_from_params;
+use subaccel::tensor::Tensor;
+
+fn main() {
+    let Ok(weights) = load_weights("artifacts/weights.bin") else {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let ds = load_dataset("artifacts/dataset.bin").expect("dataset");
+    let model = lenet5_from_params(&weights);
+    let infos = model.conv_layers(&[1, 1, 32, 32]);
+    let n = 300.min(ds.n);
+
+    println!("# pairing-policy ablation (two-pointer = paper Algorithm 1)");
+    println!(
+        "{:>9} {:>7} {:>12} {:>10} | {:>7} {:>12} {:>10}",
+        "", "2-ptr", "", "", "closest", "", ""
+    );
+    println!(
+        "{:>9} {:>7} {:>12} {:>10} | {:>7} {:>12} {:>10}",
+        "rounding", "pairs", "snap_err", "accuracy%", "pairs", "snap_err", "accuracy%"
+    );
+    for rounding in [0.005f32, 0.02, 0.05, 0.1, 0.2] {
+        let mut stats = Vec::new();
+        for closest in [false, true] {
+            let mut m = model.clone();
+            let mut pairs = 0usize;
+            let mut err = 0.0f64;
+            for info in &infos {
+                let cout = info.weight.shape()[0];
+                let klen = info.weight.len() / cout;
+                // build per-filter pairings with the selected policy
+                let mut lp = LayerPairing {
+                    filters: Vec::new(),
+                    k_len: klen,
+                    shape: info.weight.shape().to_vec(),
+                    rounding,
+                };
+                for c in 0..cout {
+                    let fw = &info.weight.data()[c * klen..(c + 1) * klen];
+                    let p = if closest {
+                        pair_filter_closest_first(fw, rounding)
+                    } else {
+                        pair_filter(fw, rounding)
+                    };
+                    pairs += p.n_pairs();
+                    err += total_snap_error(fw, &p);
+                    lp.filters.push(p);
+                }
+                m.set_conv_weights(&info.name, lp.modified_weights(&info.weight));
+            }
+            let hits = (0..n)
+                .filter(|&i| {
+                    m.infer(&ds.image32(i)).argmax_rows()[0] == ds.labels[i] as usize
+                })
+                .count();
+            stats.push((pairs, err, 100.0 * hits as f64 / n as f64));
+        }
+        println!(
+            "{:>9} {:>7} {:>12.3} {:>10.2} | {:>7} {:>12.3} {:>10.2}",
+            rounding, stats[0].0, stats[0].1, stats[0].2, stats[1].0, stats[1].1, stats[1].2
+        );
+    }
+
+    // micro-cost of each policy (offline step, but worth knowing)
+    let w: Vec<f32> = {
+        let mut rng = subaccel::util::Rng::seed_from_u64(1);
+        rng.vec_range(2400, -0.3, 0.3)
+    };
+    let t = Tensor::new(&[16, 150], w.clone());
+    let _ = &t;
+    println!("\n# policy cost on a 2400-weight layer (16 filters × 150)");
+    println!("{}", subaccel::util::bench_header());
+    let r1 = subaccel::util::bench("two-pointer (paper)", 3, 30, || {
+        (0..16).map(|c| pair_filter(&w[c * 150..(c + 1) * 150], 0.05).n_pairs()).sum::<usize>()
+    });
+    println!("{}", r1.report());
+    let r2 = subaccel::util::bench("closest-gap-first", 3, 30, || {
+        (0..16)
+            .map(|c| pair_filter_closest_first(&w[c * 150..(c + 1) * 150], 0.05).n_pairs())
+            .sum::<usize>()
+    });
+    println!("{}", r2.report());
+}

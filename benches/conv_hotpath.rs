@@ -1,0 +1,64 @@
+//! Bench: the convolution hot path across every engine in the stack —
+//! dense rust conv, paired subtractor unit (rust), and the two PJRT
+//! artifacts (Pallas-kernel and XLA-native). This is the §Perf
+//! measurement harness (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench conv_hotpath`
+
+use subaccel::accel::SubConv2d;
+use subaccel::data::load_weights;
+use subaccel::nn::layers::conv2d;
+use subaccel::nn::lenet5_from_params;
+use subaccel::runtime::{LeNet5Executor, Runtime, Variant};
+use subaccel::tensor::Tensor;
+use subaccel::util::{bench, bench_header, Rng};
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(42);
+    println!("{}", bench_header());
+
+    // --- L3 kernels: dense vs paired, LeNet C3 geometry -----------------
+    let x = Tensor::new(&[1, 6, 14, 14], rng.vec_range(6 * 14 * 14, -1.0, 1.0));
+    let w = Tensor::new(&[16, 6, 5, 5], rng.vec_range(16 * 150, -0.3, 0.3));
+    let b = Tensor::new(&[16], rng.vec_range(16, -0.1, 0.1));
+    let r = bench("rust dense conv c3 (1 img)", 5, 50, || conv2d(&x, &w, &b, 1, 0).0.len());
+    println!("{}", r.report());
+    for rounding in [0.05f32, 0.3] {
+        let sc = SubConv2d::compile(&w, &b, rounding);
+        let label = format!("rust subconv c3 r={rounding} ({} pairs)", sc.total_pairs());
+        let r = bench(&label, 5, 50, || sc.forward(&x).0.len());
+        println!("{}", r.report());
+    }
+
+    // --- whole-model paths ----------------------------------------------
+    let Ok(weights) = load_weights("artifacts/weights.bin") else {
+        println!("SKIP model/PJRT benches: run `make artifacts` first");
+        return;
+    };
+    let model = lenet5_from_params(&weights);
+    let img = Tensor::new(&[1, 1, 32, 32], rng.vec_range(1024, 0.0, 1.0));
+    let r = bench("rust engine lenet5 fwd (1 img)", 3, 30, || model.infer(&img).len());
+    println!("{}", r.report());
+
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    for (variant, name) in [(Variant::XlaNative, "xla-native"), (Variant::Pallas, "pallas")] {
+        for batch in [1usize, 8] {
+            let exe = match LeNet5Executor::load(&rt, "artifacts", variant, batch, &weights) {
+                Ok(e) => e,
+                Err(e) => {
+                    println!("SKIP {name} b{batch}: {e:#}");
+                    continue;
+                }
+            };
+            let input = Tensor::new(
+                &[batch, 1, 32, 32],
+                rng.vec_range(batch * 1024, 0.0, 1.0),
+            );
+            let iters = if matches!(variant, Variant::Pallas) { 10 } else { 50 };
+            let r = bench(&format!("pjrt {name} lenet5 b{batch}"), 2, iters, || {
+                exe.execute(&input).expect("execute").len()
+            });
+            println!("{} [{:.1} img/s]", r.report(), r.throughput(batch));
+        }
+    }
+}

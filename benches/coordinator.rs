@@ -1,0 +1,93 @@
+//! Bench: serving-path overhead and throughput — coordinator (dynamic
+//! batching) vs raw executor calls, across batch sizes and offered
+//! concurrency. This quantifies the L3 §Perf target: the coordinator
+//! must not be the bottleneck (<10 % overhead at saturation).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use subaccel::coordinator::{Coordinator, ServeConfig};
+use subaccel::data::{load_dataset, load_weights};
+use subaccel::runtime::{LeNet5Executor, Runtime, Variant};
+
+fn main() {
+    let Ok(weights) = load_weights("artifacts/weights.bin") else {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let ds = Arc::new(load_dataset("artifacts/dataset.bin").expect("dataset"));
+
+    // --- raw executor baseline ------------------------------------------
+    println!("# raw executor (no coordinator), xla-native artifact");
+    let rt = Runtime::cpu().expect("PJRT client");
+    for batch in [1usize, 8, 32] {
+        let exe = LeNet5Executor::load(&rt, "artifacts", Variant::XlaNative, batch, &weights)
+            .expect("load artifact");
+        let input = ds.batch32(0, batch);
+        // warmup
+        for _ in 0..3 {
+            exe.execute(&input).unwrap();
+        }
+        let iters = 200 / batch.max(1) + 10;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            exe.execute(&input).unwrap();
+        }
+        let dt = t0.elapsed();
+        println!(
+            "  b{batch:<3} {:>10.2} ms/batch  {:>9.1} img/s",
+            dt.as_secs_f64() * 1e3 / iters as f64,
+            (iters * batch) as f64 / dt.as_secs_f64()
+        );
+    }
+
+    // --- coordinator under offered load ----------------------------------
+    println!("\n# coordinator (dynamic batching), xla-native artifact");
+    println!(
+        "{:>6} {:>8} {:>10} {:>11} {:>10} {:>10} {:>10}",
+        "batch", "clients", "req/s", "mean_batch", "e2e_p50", "e2e_p99", "exec_mean"
+    );
+    for batch in [8usize, 32] {
+        for clients in [1usize, 8, 64] {
+            let cfg = ServeConfig {
+                artifacts_dir: "artifacts".into(),
+                batch_size: batch,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            };
+            let coord = Arc::new(Coordinator::start(cfg).expect("start"));
+            let per_client = 400 / clients;
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let coord = coord.clone();
+                    let ds = ds.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..per_client {
+                            let idx = (c * per_client + i) % ds.n;
+                            while coord.classify(ds.image32(idx)).is_err() {
+                                std::thread::sleep(Duration::from_micros(100));
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let dt = t0.elapsed();
+            let m = coord.metrics();
+            println!(
+                "{:>6} {:>8} {:>10.1} {:>11.2} {:>9}µs {:>9}µs {:>9.0}µs",
+                batch,
+                clients,
+                (clients * per_client) as f64 / dt.as_secs_f64(),
+                m.mean_batch_size(),
+                m.e2e_latency.percentile_us(50.0),
+                m.e2e_latency.percentile_us(99.0),
+                m.execute_latency.mean_us(),
+            );
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Bench: regenerate **Fig 1** — AlexNet inference computational time
+//! share per layer — on the pure-rust engine, alongside the MAC-count
+//! model (the "GPU" proxy: a massively parallel device tracks op counts
+//! rather than cache behaviour).
+//!
+//! Run: `cargo bench --bench fig1_alexnet_layers`
+//!
+//! Expected shape (paper): convolutional layers ≈ 90 % of inference time.
+
+use subaccel::nn::alexnet;
+use subaccel::tensor::Tensor;
+
+fn main() {
+    let m = alexnet();
+    let x = Tensor::zeros(&[1, 3, 227, 227]);
+    let reps = 3;
+
+    let mut acc: Vec<(String, f64, u64)> = Vec::new();
+    for _ in 0..reps {
+        for (i, (name, secs, counts)) in m.profile(&x).into_iter().enumerate() {
+            if acc.len() <= i {
+                acc.push((name, 0.0, counts.muls));
+            }
+            acc[i].1 += secs;
+        }
+    }
+    let total_t: f64 = acc.iter().map(|(_, t, _)| *t).sum();
+    let total_m: u64 = acc.iter().map(|(_, _, c)| *c).sum();
+
+    println!("# Fig 1 — AlexNet per-layer share ({reps} reps)");
+    println!(
+        "{:>8} {:>10} {:>9} {:>15} {:>9}  {}",
+        "layer", "time_ms", "cpu_%", "macs", "mac_%", "bar(cpu)"
+    );
+    for (name, t, macs) in &acc {
+        let cpu_pct = 100.0 * t / total_t;
+        let mac_pct = 100.0 * *macs as f64 / total_m as f64;
+        let bar = "#".repeat((cpu_pct / 2.0) as usize);
+        println!(
+            "{:>8} {:>10.2} {:>9.2} {:>15} {:>9.2}  {bar}",
+            name,
+            t * 1e3 / reps as f64,
+            cpu_pct,
+            macs,
+            mac_pct
+        );
+    }
+    let conv_t: f64 = acc.iter().filter(|(n, ..)| n.starts_with("conv")).map(|(_, t, _)| *t).sum();
+    let conv_m: u64 = acc.iter().filter(|(n, ..)| n.starts_with("conv")).map(|(_, _, c)| *c).sum();
+    println!(
+        "\nconv share: {:.1}% of CPU time, {:.1}% of MACs (paper Fig 1: ~90% on CPU and GPU)",
+        100.0 * conv_t / total_t,
+        100.0 * conv_m as f64 / total_m as f64
+    );
+}

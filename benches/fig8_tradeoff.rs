@@ -1,0 +1,85 @@
+//! Bench: regenerate **Fig 8** — accuracy vs power/area savings per
+//! rounding size — under both hardware cost models (published-ratio and
+//! paper-calibrated), plus the PE-array delay check.
+//!
+//! Run: `cargo bench --bench fig8_tradeoff`
+//!
+//! Expected shape (paper): savings grow steeply until rounding ≈ 0.05
+//! then flatten; accuracy is flat until ≈ 0.05 then collapses. Headline
+//! row (0.05): −32.03 % power, −24.59 % area, −0.1 % accuracy.
+
+use subaccel::accel::{model_op_sweep, LayerPairing, TABLE1_ROUNDINGS};
+use subaccel::data::{load_dataset, load_weights};
+use subaccel::hw::{savings_report, CostModel, PeArrayConfig, PeArraySim};
+use subaccel::nn::lenet5_from_params;
+
+fn main() {
+    let weights = match load_weights("artifacts/weights.bin") {
+        Ok(w) => w,
+        Err(e) => {
+            println!("SKIP: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let ds = load_dataset("artifacts/dataset.bin").expect("dataset.bin");
+    let model = lenet5_from_params(&weights);
+    let rows = model_op_sweep(&model, &[1, 1, 32, 32], &TABLE1_ROUNDINGS);
+    let baseline = &rows[0];
+    let n = 500.min(ds.n);
+
+    let base_acc = accuracy(&model, &ds, n, 0.0);
+    println!("# Fig 8 — accuracy vs savings ({n} images; baseline accuracy {:.2}%)", base_acc * 100.0);
+
+    for cost in [CostModel::ieee754_f32(), CostModel::paper_calibrated()] {
+        println!("\n## cost model: {}", cost.name);
+        println!(
+            "{:>9} {:>11} {:>10} {:>9} {:>10} {:>9}",
+            "rounding", "power_sav%", "area_sav%", "ops_sav%", "accuracy%", "acc_drop"
+        );
+        for row in &rows {
+            let s = savings_report(&cost, baseline, row);
+            let acc = accuracy(&model, &ds, n, row.rounding);
+            println!(
+                "{:>9} {:>11.2} {:>10.2} {:>9.2} {:>10.2} {:>9.2}",
+                row.rounding,
+                s.power_saving_pct,
+                s.area_saving_pct,
+                s.ops_saving_pct,
+                acc * 100.0,
+                (base_acc - acc) * 100.0
+            );
+        }
+    }
+
+    // Delay side-check: the modified unit shouldn't lengthen the schedule.
+    println!("\n## PE-array schedule (16 MAC lanes + 8 sub lanes @ 1 GHz)");
+    let sim = PeArraySim::new(PeArrayConfig::default());
+    println!("{:>9} {:>12} {:>12} {:>9} {:>9}", "rounding", "cycles", "latency_us", "mac_util", "sub_util");
+    for &r in &[0.0f32, 0.05, 0.3] {
+        let infos = model.conv_layers(&[1, 1, 32, 32]);
+        let pairings: Vec<(LayerPairing, usize)> = infos
+            .iter()
+            .map(|i| (LayerPairing::from_weights(&i.weight, r), i.out_positions))
+            .collect();
+        let refs: Vec<(&LayerPairing, usize)> = pairings.iter().map(|(p, n)| (p, *n)).collect();
+        let rep = sim.simulate_model(&refs);
+        println!(
+            "{:>9} {:>12} {:>12.1} {:>9.3} {:>9.3}",
+            r, rep.cycles, rep.latency_us, rep.mac_utilization, rep.sub_utilization
+        );
+    }
+}
+
+fn accuracy(model: &subaccel::nn::Model, ds: &subaccel::data::Dataset, n: usize, rounding: f32) -> f64 {
+    let mut m = model.clone();
+    if rounding > 0.0 {
+        for info in model.conv_layers(&[1, 1, 32, 32]) {
+            let p = LayerPairing::from_weights(&info.weight, rounding);
+            m.set_conv_weights(&info.name, p.modified_weights(&info.weight));
+        }
+    }
+    let hits = (0..n)
+        .filter(|&i| m.infer(&ds.image32(i)).argmax_rows()[0] == ds.labels[i] as usize)
+        .count();
+    hits as f64 / n as f64
+}

@@ -1,0 +1,118 @@
+//! Extension bench: what the paper's Fig 8 looks like at *system level*
+//! (datapath + memory traffic) and in the *int8* domain.
+//!
+//! Run: `cargo bench --bench system_energy`
+//!
+//! Two honest caveats to the paper this quantifies:
+//! 1. Including weight/activation movement (SRAM+DRAM) shrinks the
+//!    relative saving — input traffic is untouched by the method.
+//! 2. Int8 units have a *higher* mul/add cost ratio, so the datapath
+//!    saving grows; int8 accuracy through the quantized paired unit is
+//!    also reported.
+
+use subaccel::accel::{model_op_sweep, LayerPairing, TABLE1_ROUNDINGS};
+use subaccel::data::{load_dataset, load_weights};
+use subaccel::hw::{
+    savings_report, system_energy_opt, CostModel, LayerGeometry, MemoryModel, QuantSubConv2d,
+};
+use subaccel::nn::layers::{avgpool2, dense_layer, tanh_inplace};
+use subaccel::nn::lenet5_from_params;
+use subaccel::tensor::Tensor;
+
+fn main() {
+    let Ok(weights) = load_weights("artifacts/weights.bin") else {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let ds = load_dataset("artifacts/dataset.bin").expect("dataset");
+    let model = lenet5_from_params(&weights);
+    let infos = model.conv_layers(&[1, 1, 32, 32]);
+    let cost = CostModel::ieee754_f32();
+    let mem = MemoryModel::horowitz_45nm();
+
+    // geometry per conv layer (single inference)
+    let geos = [
+        LayerGeometry { ifmap_words: 1 * 32 * 32, ofmap_words: 6 * 28 * 28, out_positions: 784 },
+        LayerGeometry { ifmap_words: 6 * 14 * 14, ofmap_words: 16 * 10 * 10, out_positions: 100 },
+        LayerGeometry { ifmap_words: 16 * 5 * 5, ofmap_words: 120, out_positions: 1 },
+    ];
+
+    println!("# system-level energy (datapath + SRAM/DRAM traffic, f32)");
+    println!(
+        "{:>9} {:>14} {:>15} {:>16} {:>15}",
+        "rounding", "datapath_sav%", "sys_sav%(res.)", "sys_sav%(stream)", "dense_nJ(res.)"
+    );
+    let rows = model_op_sweep(&model, &[1, 1, 32, 32], &TABLE1_ROUNDINGS);
+    for (row, &r) in rows.iter().zip(TABLE1_ROUNDINGS.iter()) {
+        let mut e = [[0.0f64; 2]; 2]; // [dense|paired][resident|streamed]
+        for (info, geo) in infos.iter().zip(geos.iter()) {
+            let p = LayerPairing::from_weights(&info.weight, r);
+            for (di, dense) in [true, false].iter().enumerate() {
+                for (ri, resident) in [true, false].iter().enumerate() {
+                    e[di][ri] += system_energy_opt(&cost, &mem, &p, *geo, *dense, *resident);
+                }
+            }
+        }
+        let dp = savings_report(&cost, &rows[0], row);
+        println!(
+            "{:>9} {:>14.2} {:>15.2} {:>16.2} {:>15.1}",
+            r,
+            dp.power_saving_pct,
+            (1.0 - e[1][0] / e[0][0]) * 100.0,
+            (1.0 - e[1][1] / e[0][1]) * 100.0,
+            e[0][0] * 1e-3,
+        );
+    }
+
+    // ---- int8 domain ------------------------------------------------------
+    let int8 = CostModel::int8();
+    println!("\n# int8 datapath savings + quantized-paired-unit accuracy");
+    println!(
+        "{:>9} {:>12} {:>11} {:>14}",
+        "rounding", "power_sav%", "area_sav%", "int8_accuracy%"
+    );
+    let n = 200.min(ds.n);
+    for &r in &[0.0f32, 0.01, 0.05, 0.1, 0.2] {
+        let row = rows
+            .iter()
+            .find(|x| (x.rounding - r).abs() < 1e-9)
+            .expect("rounding in table");
+        let s = savings_report(&int8, &rows[0], row);
+        let units: Vec<QuantSubConv2d> = infos
+            .iter()
+            .map(|i| QuantSubConv2d::compile(&i.weight, &i.bias, r))
+            .collect();
+        let hits = (0..n)
+            .filter(|&i| quant_forward(&weights, &units, &ds.image32(i)) == ds.labels[i] as usize)
+            .count();
+        println!(
+            "{:>9} {:>12.2} {:>11.2} {:>14.2}",
+            r,
+            s.power_saving_pct,
+            s.area_saving_pct,
+            100.0 * hits as f64 / n as f64
+        );
+    }
+}
+
+/// LeNet-5 forward with conv layers on the int8 paired unit.
+fn quant_forward(
+    weights: &std::collections::HashMap<String, Tensor>,
+    units: &[QuantSubConv2d],
+    x: &Tensor,
+) -> usize {
+    let mut h = x.clone();
+    for (i, unit) in units.iter().enumerate() {
+        let (mut out, _) = unit.forward(&h);
+        tanh_inplace(&mut out);
+        h = out;
+        if i < 2 {
+            h = avgpool2(&h);
+        }
+    }
+    let b = h.shape()[0];
+    h = h.reshape(&[b, 120]);
+    let mut f6 = dense_layer(&h, &weights["f6_w"], &weights["f6_b"]);
+    tanh_inplace(&mut f6);
+    dense_layer(&f6, &weights["out_w"], &weights["out_b"]).argmax_rows()[0]
+}

@@ -1,0 +1,51 @@
+//! Bench: regenerate **Table 1** (op counts per rounding size) and time
+//! the preprocessor that produces it.
+//!
+//! Run: `cargo bench --bench table1_opcounts`
+//!
+//! Output: the reproduced table (to compare against the paper row-by-row)
+//! plus timing of Algorithm 1 over the whole model per rounding size —
+//! preprocessing is one-off/offline in the paper, so the requirement is
+//! "cheap enough", not "hot-path fast".
+
+use subaccel::accel::{model_op_sweep, model_ops, TABLE1_ROUNDINGS};
+use subaccel::data::load_weights;
+use subaccel::nn::{lenet5, lenet5_from_params};
+use subaccel::util::{bench, bench_header};
+
+fn main() {
+    // Trained weights if available (the paper's setting), random otherwise.
+    let model = match load_weights("artifacts/weights.bin") {
+        Ok(w) => {
+            println!("using trained weights from artifacts/weights.bin");
+            lenet5_from_params(&w)
+        }
+        Err(_) => {
+            println!("artifacts missing — falling back to seeded random weights");
+            lenet5()
+        }
+    };
+
+    println!("\n# Table 1 (reproduced)");
+    println!(
+        "{:>9} {:>10} {:>13} {:>16} {:>9}",
+        "rounding", "additions", "subtractions", "multiplications", "total"
+    );
+    let rows = model_op_sweep(&model, &[1, 1, 32, 32], &TABLE1_ROUNDINGS);
+    for r in &rows {
+        println!(
+            "{:>9} {:>10} {:>13} {:>16} {:>9}",
+            r.rounding, r.adds, r.subs, r.muls, r.total
+        );
+    }
+    assert_eq!(rows[0].muls, 405_600, "baseline must match the paper exactly");
+
+    println!("\n# preprocessing cost (Algorithm 1 over all conv layers)");
+    println!("{}", bench_header());
+    for &r in &[0.0f32, 0.05, 0.3] {
+        let res = bench(&format!("preprocess rounding={r}"), 3, 20, || {
+            model_ops(&model, &[1, 1, 32, 32], r).subs
+        });
+        println!("{}", res.report());
+    }
+}

@@ -1,0 +1,99 @@
+//! Quickstart: the paper's pipeline end to end on a handful of images.
+//!
+//! 1. Load the trained LeNet-5 (`artifacts/weights.bin`).
+//! 2. Run Algorithm 1 at rounding 0.05 (the paper's headline point).
+//! 3. Show what it bought: pairs found, op counts, power/area savings.
+//! 4. Classify test images on the *paired subtractor datapath* and on the
+//!    original dense weights, and compare.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use anyhow::{Context, Result};
+use subaccel::accel::{model_ops, LayerPairing, SubConv2d};
+use subaccel::data::{load_dataset, load_weights};
+use subaccel::hw::{savings_report, CostModel};
+use subaccel::nn::layers::{avgpool2, dense_layer, tanh_inplace};
+use subaccel::nn::lenet5_from_params;
+use subaccel::tensor::Tensor;
+
+const ROUNDING: f32 = 0.05;
+
+fn main() -> Result<()> {
+    let weights = load_weights("artifacts/weights.bin").context("run `make artifacts` first")?;
+    let ds = load_dataset("artifacts/dataset.bin")?;
+    let model = lenet5_from_params(&weights);
+
+    // --- 2. preprocess -----------------------------------------------------
+    println!("== Algorithm 1 at rounding {ROUNDING} ==");
+    let infos = model.conv_layers(&[1, 1, 32, 32]);
+    let mut units = Vec::new();
+    for info in &infos {
+        let pairing = LayerPairing::from_weights(&info.weight, ROUNDING);
+        println!(
+            "  {}: {:>5} weights → {:>4} pairs ({:>5.1}% combined), max snap err {:.5}",
+            info.name,
+            info.weight.len(),
+            pairing.total_pairs(),
+            200.0 * pairing.total_pairs() as f32 / info.weight.len() as f32,
+            pairing.max_snap_error(&info.weight),
+        );
+        units.push(SubConv2d::compile(&info.weight, &info.bias, ROUNDING));
+    }
+
+    // --- 3. what it bought ---------------------------------------------------
+    let base = model_ops(&model, &[1, 1, 32, 32], 0.0);
+    let point = model_ops(&model, &[1, 1, 32, 32], ROUNDING);
+    println!("\n== op counts per inference (conv layers) ==");
+    println!("  dense : {} mul + {} add            = {} ops", base.muls, base.adds, base.total);
+    println!(
+        "  paired: {} mul + {} add + {} sub = {} ops",
+        point.muls, point.adds, point.subs, point.total
+    );
+    let cost = CostModel::ieee754_f32();
+    let s = savings_report(&cost, &base, &point);
+    println!(
+        "  cost model {} → power −{:.2}%, area −{:.2}%, ops −{:.2}%",
+        cost.name, s.power_saving_pct, s.area_saving_pct, s.ops_saving_pct
+    );
+
+    // --- 4. classify on the paired datapath ---------------------------------
+    println!("\n== classification (paired subtractor unit vs dense) ==");
+    let n = 16.min(ds.n);
+    let mut agree = 0;
+    let mut hits = 0;
+    for i in 0..n {
+        let img = ds.image32(i);
+        let dense_pred = model.infer(&img).argmax_rows()[0];
+        let paired_pred = paired_forward(&weights, &units, &img);
+        agree += (dense_pred == paired_pred) as usize;
+        hits += (paired_pred == ds.labels[i] as usize) as usize;
+        println!(
+            "  img {i:>2}: label {}  dense→{}  paired→{}",
+            ds.labels[i], dense_pred, paired_pred
+        );
+    }
+    println!("\npaired accuracy {hits}/{n}; dense/paired agreement {agree}/{n}");
+    Ok(())
+}
+
+/// LeNet-5 forward with all conv layers on the subtractor datapath.
+fn paired_forward(
+    weights: &std::collections::HashMap<String, Tensor>,
+    units: &[SubConv2d],
+    x: &Tensor,
+) -> usize {
+    let mut h = x.clone();
+    for (i, unit) in units.iter().enumerate() {
+        let (mut out, _) = unit.forward(&h);
+        tanh_inplace(&mut out);
+        h = out;
+        if i < 2 {
+            h = avgpool2(&h);
+        }
+    }
+    let b = h.shape()[0];
+    h = h.reshape(&[b, 120]);
+    let mut f6 = dense_layer(&h, &weights["f6_w"], &weights["f6_b"]);
+    tanh_inplace(&mut f6);
+    dense_layer(&f6, &weights["out_w"], &weights["out_b"]).argmax_rows()[0]
+}

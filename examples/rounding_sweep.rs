@@ -1,0 +1,86 @@
+//! Full rounding-size sweep: regenerates Table 1, Fig 7 (ASCII bar
+//! chart of the op mix) and Fig 8 (accuracy/power/area trade-off) in one
+//! run, and writes CSVs to `artifacts/results/` for external plotting.
+//!
+//! Run: `cargo run --release --example rounding_sweep`
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use subaccel::accel::{model_op_sweep, LayerPairing, TABLE1_ROUNDINGS};
+use subaccel::data::{load_dataset, load_weights};
+use subaccel::hw::{savings_report, CostModel};
+use subaccel::nn::lenet5_from_params;
+
+fn main() -> Result<()> {
+    let weights = load_weights("artifacts/weights.bin").context("run `make artifacts`")?;
+    let ds = load_dataset("artifacts/dataset.bin")?;
+    let model = lenet5_from_params(&weights);
+    let rows = model_op_sweep(&model, &[1, 1, 32, 32], &TABLE1_ROUNDINGS);
+    std::fs::create_dir_all("artifacts/results")?;
+
+    // ---- Table 1 ---------------------------------------------------------
+    println!("# Table 1 — op counts per rounding size");
+    println!(
+        "{:>9} {:>10} {:>13} {:>16} {:>9}",
+        "rounding", "additions", "subtractions", "multiplications", "total"
+    );
+    let mut csv = String::from("rounding,additions,subtractions,multiplications,total\n");
+    for r in &rows {
+        println!(
+            "{:>9} {:>10} {:>13} {:>16} {:>9}",
+            r.rounding, r.adds, r.subs, r.muls, r.total
+        );
+        writeln!(csv, "{},{},{},{},{}", r.rounding, r.adds, r.subs, r.muls, r.total)?;
+    }
+    std::fs::write("artifacts/results/table1.csv", &csv)?;
+
+    // ---- Fig 7: op mix bar chart ------------------------------------------
+    println!("\n# Fig 7 — op mix per rounding size (m=mul, a=add, s=sub; 1 char ≈ 16k ops)");
+    for r in &rows {
+        let scale = 16_000u64;
+        println!(
+            "{:>7}: {}{}{}",
+            r.rounding,
+            "m".repeat((r.muls / scale) as usize),
+            "a".repeat((r.adds / scale) as usize),
+            "s".repeat((r.subs / scale) as usize)
+        );
+    }
+
+    // ---- Fig 8 -------------------------------------------------------------
+    let n = 1000.min(ds.n);
+    let cost = CostModel::ieee754_f32();
+    let baseline = &rows[0];
+    println!("\n# Fig 8 — trade-off ({n} images, {})", cost.name);
+    println!(
+        "{:>9} {:>11} {:>10} {:>10}",
+        "rounding", "power_sav%", "area_sav%", "accuracy%"
+    );
+    let mut csv = String::from("rounding,power_saving_pct,area_saving_pct,ops_saving_pct,accuracy_pct\n");
+    for row in &rows {
+        let s = savings_report(&cost, baseline, row);
+        let mut m = model.clone();
+        if row.rounding > 0.0 {
+            for info in model.conv_layers(&[1, 1, 32, 32]) {
+                let p = LayerPairing::from_weights(&info.weight, row.rounding);
+                m.set_conv_weights(&info.name, p.modified_weights(&info.weight));
+            }
+        }
+        let hits = (0..n)
+            .filter(|&i| m.infer(&ds.image32(i)).argmax_rows()[0] == ds.labels[i] as usize)
+            .count();
+        let acc = 100.0 * hits as f64 / n as f64;
+        println!(
+            "{:>9} {:>11.2} {:>10.2} {:>10.2}",
+            row.rounding, s.power_saving_pct, s.area_saving_pct, acc
+        );
+        writeln!(
+            csv,
+            "{},{:.4},{:.4},{:.4},{:.4}",
+            row.rounding, s.power_saving_pct, s.area_saving_pct, s.ops_saving_pct, acc
+        )?;
+    }
+    std::fs::write("artifacts/results/fig8.csv", &csv)?;
+    println!("\nwrote artifacts/results/{{table1,fig8}}.csv");
+    Ok(())
+}

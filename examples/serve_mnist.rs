@@ -1,0 +1,82 @@
+//! End-to-end serving demo (the DESIGN.md validation driver): start the
+//! coordinator over the AOT LeNet-5 artifact, fire concurrent client
+//! load, switch rounding variants live, and report accuracy + latency +
+//! throughput per variant.
+//!
+//! Run: `cargo run --release --example serve_mnist` (after `make artifacts`)
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use subaccel::coordinator::{Coordinator, ServeConfig};
+use subaccel::data::load_dataset;
+use subaccel::runtime::Variant;
+
+const REQUESTS: usize = 512;
+const CLIENTS: usize = 16;
+
+fn main() -> Result<()> {
+    let ds = Arc::new(load_dataset("artifacts/dataset.bin").context("run `make artifacts`")?);
+    let cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        variant: Variant::XlaNative,
+        batch_size: 8,
+        max_wait: Duration::from_millis(2),
+        queue_cap: 1024,
+        rounding: 0.0,
+        workers: 1,
+    };
+    println!("starting coordinator (xla-native artifact, batch {})", cfg.batch_size);
+    let coord = Arc::new(Coordinator::start(cfg)?);
+
+    // serve the paper's interesting rounding points, switching live
+    for rounding in [0.0f32, 0.05, 0.3] {
+        let pairs = coord.set_rounding(rounding)?;
+        let t0 = Instant::now();
+        let per_client = REQUESTS / CLIENTS;
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let coord = coord.clone();
+                let ds = ds.clone();
+                std::thread::spawn(move || {
+                    let mut hits = 0usize;
+                    for i in 0..per_client {
+                        let idx = (c * per_client + i) % ds.n;
+                        loop {
+                            match coord.classify(ds.image32(idx)) {
+                                Ok(logits) => {
+                                    let pred = logits
+                                        .iter()
+                                        .enumerate()
+                                        .max_by(|a, b| a.1.total_cmp(b.1))
+                                        .map(|(j, _)| j)
+                                        .unwrap();
+                                    hits += (pred == ds.labels[idx] as usize) as usize;
+                                    break;
+                                }
+                                Err(_) => std::thread::sleep(Duration::from_micros(200)),
+                            }
+                        }
+                    }
+                    hits
+                })
+            })
+            .collect();
+        let hits: usize = handles.into_iter().map(|h| h.join().unwrap_or(0)).sum();
+        let dt = t0.elapsed();
+        let m = coord.metrics();
+        println!(
+            "\nrounding {rounding:<5} ({pairs:>5} pairs): {:>6.1} req/s, accuracy {:>6.2}%",
+            REQUESTS as f64 / dt.as_secs_f64(),
+            100.0 * hits as f64 / REQUESTS as f64,
+        );
+        println!("  {}", m.summary());
+    }
+
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => unreachable!("all clients joined"),
+    }
+    println!("\ndone.");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT export: lower the L2 model to HLO *text* artifacts for rust/PJRT.
+
+Interchange is HLO text, NOT ``lowered.compile().serialize()`` and NOT a
+serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction
+ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all weights are *arguments*, so one artifact serves every
+rounding variant — the rust coordinator feeds modified weights):
+
+  lenet5_b{1,8,32}.hlo.txt   Pallas-kernel forward (the paper-integrated path)
+  lenet5_xla_b{1,8,32}.hlo.txt  lax.conv forward (XLA-native §Perf baseline)
+  subconv_c3_b1.hlo.txt      paired subtractor-form conv for layer C3 with
+                             pairing tables as runtime arguments — rust
+                             feeds its own Algorithm-1 output and checks
+                             equivalence against the dense modified conv.
+  lenet5_paired_b{1,8}.hlo.txt  the fully-paired model: EVERY conv layer in
+                             subtractor form, all pairing tables runtime
+                             arguments — the paper's datapath as the
+                             serving artifact (rust: PairedLeNet5Executor).
+
+Run via ``make artifacts`` (trains first if weights.bin is missing).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import subconv
+
+BATCH_SIZES = (1, 8, 32)
+
+# Fixed padded pairing-table sizes for the subconv artifact (layer C3:
+# K = 150 weights/filter → at most 75 pairs).
+C3_PMAX = 75
+C3_UMAX = 150
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs():
+    return [
+        jax.ShapeDtypeStruct(model.PARAM_SHAPES[n], jnp.float32)
+        for n in model.PARAM_NAMES
+    ]
+
+
+def lower_lenet5(batch: int, xla_native: bool) -> str:
+    x = jax.ShapeDtypeStruct((batch, 1, 32, 32), jnp.float32)
+    fn = model.lenet5_xla_flat if xla_native else model.lenet5_flat
+    return to_hlo_text(jax.jit(fn).lower(x, *_param_specs()))
+
+
+def subconv_c3_flat(x, i1, i2, pk, iu, wu, bias):
+    """C3 paired conv with pairing tables as runtime args.  x: (B,6,14,14)."""
+    return (subconv.subconv2d(x, i1, i2, pk, iu, wu, bias, 5, 5),)
+
+
+def lower_subconv_c3(batch: int) -> str:
+    cout = 16
+    specs = (
+        jax.ShapeDtypeStruct((batch, 6, 14, 14), jnp.float32),
+        jax.ShapeDtypeStruct((cout, C3_PMAX), jnp.int32),
+        jax.ShapeDtypeStruct((cout, C3_PMAX), jnp.int32),
+        jax.ShapeDtypeStruct((cout, C3_PMAX), jnp.float32),
+        jax.ShapeDtypeStruct((cout, C3_UMAX), jnp.int32),
+        jax.ShapeDtypeStruct((cout, C3_UMAX), jnp.float32),
+        jax.ShapeDtypeStruct((cout,), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(subconv_c3_flat).lower(*specs))
+
+
+def lower_paired_lenet5(batch: int) -> str:
+    """Fully-paired LeNet-5: pairing tables for all conv layers are
+    runtime arguments (see model.lenet5_paired_flat for the order)."""
+    specs = [jax.ShapeDtypeStruct((batch, 1, 32, 32), jnp.float32)]
+    for name in ("c1", "c3", "c5"):
+        cout, pmax, umax = model.PAIRED_TABLE_SIZES[name]
+        specs += [
+            jax.ShapeDtypeStruct((cout, pmax), jnp.int32),
+            jax.ShapeDtypeStruct((cout, pmax), jnp.int32),
+            jax.ShapeDtypeStruct((cout, pmax), jnp.float32),
+            jax.ShapeDtypeStruct((cout, umax), jnp.int32),
+            jax.ShapeDtypeStruct((cout, umax), jnp.float32),
+            jax.ShapeDtypeStruct((cout,), jnp.float32),
+        ]
+    for n in ("f6_w", "f6_b", "out_w", "out_b"):
+        specs.append(jax.ShapeDtypeStruct(model.PARAM_SHAPES[n], jnp.float32))
+    return to_hlo_text(jax.jit(model.lenet5_paired_flat).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    if not args.skip_train and not os.path.exists(os.path.join(outdir, "weights.bin")):
+        print("weights.bin missing — training LeNet-5 (build-time, one-off)")
+        from . import train as _train
+
+        params, test_raw, xte32, yte, curve = _train.train()
+        _train.export(outdir, params, test_raw, xte32, yte, curve)
+
+    for b in BATCH_SIZES:
+        for native in (False, True):
+            tag = "lenet5_xla" if native else "lenet5"
+            path = os.path.join(outdir, f"{tag}_b{b}.hlo.txt")
+            text = lower_lenet5(b, native)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    path = os.path.join(outdir, "subconv_c3_b1.hlo.txt")
+    text = lower_subconv_c3(1)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    for b in (1, 8):
+        path = os.path.join(outdir, f"lenet5_paired_b{b}.hlo.txt")
+        text = lower_paired_lenet5(b)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

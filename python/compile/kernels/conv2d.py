@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: tiled im2col-matmul convolution.
+
+The convolution is phrased the TPU way: the L2 model extracts im2col
+patches (a relayout, done once per layer in plain jnp so XLA fuses it),
+and the hot-spot — the (M, K) × (K, N) contraction — runs as a Pallas
+kernel tiled for VMEM, with each grid step feeding one (TM, K)·(K, N)
+block to the MXU.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see DESIGN.md
+§Hardware-Adaptation).  Block shapes are still chosen as if for VMEM —
+the structure, not the interpreter wallclock, is what carries to TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile for the patch matrix. LeNet-5 M values are B*784, B*100, B*1.
+# VMEM budget: a (TM, K≤400) x-block + (K, Cout≤120) w-block + (TM, Cout)
+# o-block at TM=512 is ≈ 1.1 MiB — comfortably inside a 16 MiB VMEM budget
+# and MXU-aligned on the row dimension. §Perf iterations 4-5 (see
+# EXPERIMENTS.md): TM 128 → 512 quartered the grid-step count (the
+# dominant interpret-mode overhead) and cut the b8 artifact latency 1.76x;
+# TM 1024 regressed batch-1 by 26 % (pad rows dominate a 784-row layer)
+# and was reverted. On real TPU the 512-row shape keeps the MXU fed for
+# >=4 consecutive systolic passes per DMA.
+DEFAULT_TM = 512
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One grid step: o = x @ w + b over a (TM, K)·(K, N) VMEM tile."""
+    x = x_ref[...]
+    w = w_ref[...]
+    # MXU contraction; preferred_element_type pins f32 accumulation.
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] = acc + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tm",))
+def matmul_bias(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, tm: int = DEFAULT_TM):
+    """Pallas tiled ``x @ w + b``.
+
+    x: (M, K), w: (K, N), b: (N,) → (M, N).  M is padded up to a multiple
+    of the row tile; the pad rows are dropped before returning.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    tm = min(tm, max(m, 1))
+    mp = ((m + tm - 1) // tm) * tm
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    grid = (mp // tm,)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:m]
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """Patch extraction, identical ordering to ``ref.im2col`` (c, dy, dx)."""
+    b, c, h, w = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = [
+        x[:, :, dy : dy + oh, dx : dx + ow] for dy in range(kh) for dx in range(kw)
+    ]
+    stack = jnp.stack(cols, axis=0).transpose(1, 3, 4, 2, 0)
+    return stack.reshape(b, oh, ow, c * kh * kw)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Valid stride-1 convolution via the Pallas matmul kernel.
+
+    x: (B, C, H, W), w: (Cout, C, kh, kw), b: (Cout,) → (B, Cout, OH, OW).
+    """
+    bsz, cin, h, _ = x.shape
+    cout, _, kh, kw = w.shape
+    oh, ow = h - kh + 1, x.shape[3] - kw + 1
+    patches = im2col(x, kh, kw).reshape(bsz * oh * ow, cin * kh * kw)
+    wmat = w.reshape(cout, cin * kh * kw).T  # (K, Cout)
+    out = matmul_bias(patches, wmat, b)  # (B*OH*OW, Cout)
+    return out.reshape(bsz, oh, ow, cout).transpose(0, 3, 1, 2)

@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything in this module is deliberately written with plain ``jax.numpy``
+(no ``pallas``, no ``lax.conv``) so it can serve as an independent
+correctness oracle: the Pallas kernels in ``conv2d.py`` / ``subconv.py``
+and the lax-based training path in ``train.py`` are both checked against
+these functions by ``python/tests/``.
+
+Layout convention: NCHW activations, OIHW weights (matches the rust
+``nn`` engine so golden files transfer without transposes).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """Extract valid-convolution patches.
+
+    ``x``: (B, C, H, W)  →  (B, OH, OW, C*kh*kw) with the patch axis ordered
+    (c, dy, dx) — the same order ``weights.reshape(Cout, -1)`` produces from
+    OIHW weights, and the order the rust engine uses.
+    """
+    b, c, h, w = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(x[:, :, dy : dy + oh, dx : dx + ow])
+    # (kh*kw, B, C, OH, OW) -> (B, OH, OW, C, kh*kw) -> (B, OH, OW, C*kh*kw)
+    stack = jnp.stack(cols, axis=0)
+    stack = stack.transpose(1, 3, 4, 2, 0)
+    return stack.reshape(b, oh, ow, c * kh * kw)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Valid, stride-1 2-D convolution (cross-correlation, as in CNNs).
+
+    ``x``: (B, C, H, W), ``w``: (Cout, C, kh, kw), ``b``: (Cout,)
+    →  (B, Cout, OH, OW)
+    """
+    cout, cin, kh, kw = w.shape
+    patches = im2col(x, kh, kw)  # (B, OH, OW, K)
+    wmat = w.reshape(cout, cin * kh * kw)  # (Cout, K)
+    out = jnp.einsum("bhwk,ck->bchw", patches, wmat)
+    return out + b[None, :, None, None]
+
+
+def subconv2d(
+    x: jnp.ndarray,
+    pair_i1: np.ndarray,
+    pair_i2: np.ndarray,
+    pair_k: np.ndarray,
+    unp_idx: np.ndarray,
+    unp_w: np.ndarray,
+    bias: jnp.ndarray,
+    kh: int,
+    kw: int,
+) -> jnp.ndarray:
+    """Reference for the paired (subtractor-form) convolution.
+
+    Implements the paper's modified convolution unit: combined weight pairs
+    compute ``k * (I1 - I2)`` (one subtraction replaces one multiply + one
+    add, eq. (1) of the paper), uncombined weights use the ordinary
+    multiply-accumulate.
+
+    Per output channel ``c`` the preprocessor supplies padded arrays:
+      pair_i1/pair_i2: (Cout, Pmax) int32 patch indices of I1/I2,
+      pair_k:          (Cout, Pmax) f32 snapped magnitudes (0 ⇒ padding),
+      unp_idx:         (Cout, Umax) int32 indices of uncombined weights,
+      unp_w:           (Cout, Umax) f32 values (0 ⇒ padding).
+    """
+    patches = im2col(x, kh, kw)  # (B, OH, OW, K)
+    x1 = patches[..., pair_i1]  # (B, OH, OW, Cout, Pmax)
+    x2 = patches[..., pair_i2]
+    xu = patches[..., unp_idx]  # (B, OH, OW, Cout, Umax)
+    out = jnp.einsum("bhwcp,cp->bchw", x1 - x2, pair_k)
+    out = out + jnp.einsum("bhwcu,cu->bchw", xu, unp_w)
+    return out + bias[None, :, None, None]
+
+
+def avgpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2×2 average pooling, stride 2.  (B, C, H, W) → (B, C, H/2, W/2)."""
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fully connected layer.  x: (B, In), w: (Out, In), b: (Out,)."""
+    return x @ w.T + b
+
+
+def lenet5(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Reference LeNet-5 forward pass (paper Fig. 2).
+
+    Input (B, 1, 32, 32) → logits (B, 10).  tanh activations, average
+    pooling — the classic formulation the paper's op counts correspond to
+    (conv MACs: C1 117 600 + C3 240 000 + C5 48 000 = 405 600).
+    """
+    h = jnp.tanh(conv2d(x, params["c1_w"], params["c1_b"]))  # (B,6,28,28)
+    h = avgpool2(h)  # (B,6,14,14)
+    h = jnp.tanh(conv2d(h, params["c3_w"], params["c3_b"]))  # (B,16,10,10)
+    h = avgpool2(h)  # (B,16,5,5)
+    h = jnp.tanh(conv2d(h, params["c5_w"], params["c5_b"]))  # (B,120,1,1)
+    h = h.reshape(h.shape[0], 120)
+    h = jnp.tanh(dense(h, params["f6_w"], params["f6_b"]))  # (B,84)
+    return dense(h, params["out_w"], params["out_b"])  # (B,10)

@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: the paper's subtractor-form convolution unit.
+
+This is the TPU re-think of the paper's ASIC datapath (DESIGN.md
+§Hardware-Adaptation).  The preprocessor (Algorithm 1) has already paired
+each positive weight `Ka` with a negative weight `Kb ≈ -Ka` inside every
+filter and snapped both to a common magnitude `k`; the kernel then
+computes, per output channel,
+
+    out[c] = Σ_p  k[c,p] · (I1[c,p] − I2[c,p])   ← subtractor lanes
+           + Σ_u  w[c,u] · Iu[c,u]               ← ordinary MAC lanes
+           + bias[c]
+
+The input *difference* is formed first (VPU subtraction over a whole VMEM
+tile), then contracted — that is the structural analogue of the paper's
+"one subtraction replaces one multiply + one add": the multiply count of
+the pair contraction is half that of the dense contraction it replaces.
+
+Numerically the result is bit-identical (up to f32 reassociation) to a
+dense convolution with the *modified* weights — property-tested against
+``ref.subconv2d`` and ``ref.conv2d`` in python/tests/test_subconv.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import conv2d as _conv
+
+DEFAULT_TM = 128
+
+
+def _subconv_kernel(x_ref, i1_ref, i2_ref, pk_ref, iu_ref, wu_ref, b_ref, o_ref):
+    """One grid step over a (TM, K) patch tile.
+
+    Gathers are static-index (i1/i2/iu are compile-time-constant inputs in
+    VMEM); the subtract runs element-wise on the gathered tiles before the
+    contraction, mirroring the hardware subtractor placed ahead of the
+    multiplier array in the paper's Fig. 5.
+    """
+    x = x_ref[...]  # (TM, K)
+    i1 = i1_ref[...]  # (Cout, Pmax) int32
+    i2 = i2_ref[...]
+    pk = pk_ref[...]  # (Cout, Pmax) f32, 0 padded
+    iu = iu_ref[...]  # (Cout, Umax) int32
+    wu = wu_ref[...]  # (Cout, Umax) f32, 0 padded
+
+    x1 = x[:, i1]  # (TM, Cout, Pmax)
+    x2 = x[:, i2]
+    diff = x1 - x2  # ← the subtractor lane
+    pair_out = jnp.einsum("mcp,cp->mc", diff, pk)
+
+    xu = x[:, iu]  # (TM, Cout, Umax)
+    mac_out = jnp.einsum("mcu,cu->mc", xu, wu)
+
+    o_ref[...] = pair_out + mac_out + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tm",))
+def paired_matmul(
+    x: jnp.ndarray,
+    pair_i1: jnp.ndarray,
+    pair_i2: jnp.ndarray,
+    pair_k: jnp.ndarray,
+    unp_idx: jnp.ndarray,
+    unp_w: jnp.ndarray,
+    bias: jnp.ndarray,
+    tm: int = DEFAULT_TM,
+):
+    """Paired contraction over patch rows.
+
+    x: (M, K) im2col patches; pair/unp arrays as in ``ref.subconv2d``
+    (padded per-channel); → (M, Cout).
+    """
+    m, k = x.shape
+    cout = pair_i1.shape[0]
+    tm = min(tm, max(m, 1))
+    mp = ((m + tm - 1) // tm) * tm
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    pmax, umax = pair_i1.shape[1], unp_idx.shape[1]
+    out = pl.pallas_call(
+        _subconv_kernel,
+        grid=(mp // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((cout, pmax), lambda i: (0, 0)),
+            pl.BlockSpec((cout, pmax), lambda i: (0, 0)),
+            pl.BlockSpec((cout, pmax), lambda i: (0, 0)),
+            pl.BlockSpec((cout, umax), lambda i: (0, 0)),
+            pl.BlockSpec((cout, umax), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, cout), jnp.float32),
+        interpret=True,
+    )(x, pair_i1, pair_i2, pair_k, unp_idx, unp_w, bias)
+    return out[:m]
+
+
+def subconv2d(
+    x: jnp.ndarray,
+    pair_i1,
+    pair_i2,
+    pair_k,
+    unp_idx,
+    unp_w,
+    bias,
+    kh: int,
+    kw: int,
+) -> jnp.ndarray:
+    """Paired (subtractor-form) convolution via the Pallas kernel.
+
+    Same contract as ``ref.subconv2d``: x (B, C, H, W) → (B, Cout, OH, OW).
+    """
+    bsz, cin, h, w = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    patches = _conv.im2col(x, kh, kw).reshape(bsz * oh * ow, cin * kh * kw)
+    out = paired_matmul(
+        patches,
+        jnp.asarray(pair_i1, jnp.int32),
+        jnp.asarray(pair_i2, jnp.int32),
+        jnp.asarray(pair_k, jnp.float32),
+        jnp.asarray(unp_idx, jnp.int32),
+        jnp.asarray(unp_w, jnp.float32),
+        jnp.asarray(bias, jnp.float32),
+    )
+    cout = out.shape[1]
+    return out.reshape(bsz, oh, ow, cout).transpose(0, 3, 1, 2)

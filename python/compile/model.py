@@ -1,0 +1,152 @@
+"""L2: LeNet-5 in JAX, calling the L1 Pallas kernels.
+
+Two forward paths share one parameter pytree:
+
+  * ``lenet5``        — inference path used for the AOT artifact; conv
+    layers run through the Pallas im2col-matmul kernel (kernels.conv2d).
+    Weights are *function arguments*, so a single HLO artifact serves
+    every rounding variant (the rust coordinator feeds modified weights).
+  * ``lenet5_train``  — training path on ``lax.conv_general_dilated``
+    (fastest on CPU for the build-time trainer); numerically equivalent,
+    asserted in python/tests/test_model.py.
+
+Parameter names/order are the wire contract with rust — see PARAM_NAMES.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d as pconv
+from .kernels import ref
+
+# Wire order of LeNet-5 parameters (weights.bin keys and the argument
+# order of the AOT-lowered HLO after the image input).
+PARAM_NAMES = [
+    "c1_w", "c1_b",
+    "c3_w", "c3_b",
+    "c5_w", "c5_b",
+    "f6_w", "f6_b",
+    "out_w", "out_b",
+]
+
+PARAM_SHAPES = {
+    "c1_w": (6, 1, 5, 5), "c1_b": (6,),
+    "c3_w": (16, 6, 5, 5), "c3_b": (16,),
+    "c5_w": (120, 16, 5, 5), "c5_b": (120,),
+    "f6_w": (84, 120), "f6_b": (84,),
+    "out_w": (10, 84), "out_b": (10,),
+}
+
+CONV_LAYERS = {  # name -> (weight key, output positions OH*OW)
+    "c1": ("c1_w", 28 * 28),
+    "c3": ("c3_w", 10 * 10),
+    "c5": ("c5_w", 1 * 1),
+}
+
+
+def init_params(seed: int) -> dict:
+    """Glorot-uniform init, f32."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in PARAM_SHAPES.items():
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = int(np.prod(shape[1:]))
+            fan_out = shape[0]
+            lim = np.sqrt(6.0 / (fan_in + fan_out))
+            params[name] = jnp.asarray(
+                rng.uniform(-lim, lim, shape), dtype=jnp.float32
+            )
+    return params
+
+
+def _head(params: dict, h: jnp.ndarray) -> jnp.ndarray:
+    h = h.reshape(h.shape[0], 120)
+    h = jnp.tanh(ref.dense(h, params["f6_w"], params["f6_b"]))
+    return ref.dense(h, params["out_w"], params["out_b"])
+
+
+def lenet5(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Inference forward on the Pallas conv kernel.  x (B,1,32,32) → (B,10)."""
+    h = jnp.tanh(pconv.conv2d(x, params["c1_w"], params["c1_b"]))
+    h = ref.avgpool2(h)
+    h = jnp.tanh(pconv.conv2d(h, params["c3_w"], params["c3_b"]))
+    h = ref.avgpool2(h)
+    h = jnp.tanh(pconv.conv2d(h, params["c5_w"], params["c5_b"]))
+    return _head(params, h)
+
+
+def _lax_conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def lenet5_train(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Training forward on lax.conv (build-time only, never exported)."""
+    h = jnp.tanh(_lax_conv(x, params["c1_w"], params["c1_b"]))
+    h = ref.avgpool2(h)
+    h = jnp.tanh(_lax_conv(h, params["c3_w"], params["c3_b"]))
+    h = ref.avgpool2(h)
+    h = jnp.tanh(_lax_conv(h, params["c5_w"], params["c5_b"]))
+    return _head(params, h)
+
+
+def lenet5_flat(x: jnp.ndarray, *flat_params) -> tuple[jnp.ndarray]:
+    """Flat-argument wrapper for AOT lowering: (x, w0, w1, ...) → (logits,).
+
+    Returns a 1-tuple because the HLO is lowered with return_tuple=True and
+    the rust side unwraps with to_tuple1() (see /opt/xla-example/README.md).
+    """
+    params = dict(zip(PARAM_NAMES, flat_params))
+    return (lenet5(params, x),)
+
+
+def lenet5_xla_flat(x: jnp.ndarray, *flat_params) -> tuple[jnp.ndarray]:
+    """Same contract on lax.conv — the XLA-native baseline artifact used in
+    the §Perf comparison (pallas-interpret vs native conv on CPU PJRT)."""
+    params = dict(zip(PARAM_NAMES, flat_params))
+    return (lenet5_train(params, x),)
+
+
+# Fixed padded pairing-table sizes per conv layer for the fully-paired
+# artifact: (Cout, Pmax = K//2, Umax = K). Shared contract with rust.
+PAIRED_TABLE_SIZES = {
+    "c1": (6, 12, 25),
+    "c3": (16, 75, 150),
+    "c5": (120, 200, 400),
+}
+
+
+def lenet5_paired_flat(x: jnp.ndarray, *args) -> tuple[jnp.ndarray]:
+    """LeNet-5 with ALL conv layers in the paper's subtractor form.
+
+    The paired datapath itself is the serving artifact: for each conv
+    layer the caller supplies runtime pairing tables
+    ``(i1, i2, k, iu, wu, bias)`` produced by Algorithm 1 (rust or numpy),
+    followed by the dense head weights. Argument order:
+
+        x,
+        c1: i1, i2, pk, iu, wu, bias,
+        c3: ..., c5: ...,
+        f6_w, f6_b, out_w, out_b
+    """
+    from .kernels import subconv as psub
+
+    it = iter(args)
+    h = x
+    for name in ("c1", "c3", "c5"):
+        i1, i2, pk, iu, wu, bias = (next(it) for _ in range(6))
+        h = jnp.tanh(psub.subconv2d(h, i1, i2, pk, iu, wu, bias, 5, 5))
+        if name != "c5":
+            h = ref.avgpool2(h)
+    f6_w, f6_b, out_w, out_b = (next(it) for _ in range(4))
+    h = h.reshape(h.shape[0], 120)
+    h = jnp.tanh(ref.dense(h, f6_w, f6_b))
+    return (ref.dense(h, out_w, out_b),)

@@ -1,0 +1,142 @@
+"""Reference (numpy) implementation of the paper's weight preprocessor.
+
+Section III-A / Algorithm 1: per conv filter, sort the weights, split into
+positive and negative lists, then walk both lists with two pointers from
+the smallest magnitude upward.  A positive weight ``Ka`` and a negative
+weight ``Kb`` are *combined* when their magnitudes agree within the
+``rounding`` size; both are snapped to the mean magnitude ``k`` so that
+``Kb = -Ka`` holds exactly and inference can use ``k · (I1 − I2)``.
+
+This module is the cross-validation oracle for the production
+implementation in ``rust/src/accel/preprocess.rs`` — both sides must
+produce identical pairings and identical modified weights on the shared
+trained model (checked via artifacts/golden files).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class FilterPairing:
+    """Pairing result for one conv filter (one output channel)."""
+
+    pair_i1: list = field(default_factory=list)  # flat index of the + weight
+    pair_i2: list = field(default_factory=list)  # flat index of the − weight
+    pair_k: list = field(default_factory=list)  # snapped magnitude
+    unp_idx: list = field(default_factory=list)  # uncombined flat indices
+    unp_w: list = field(default_factory=list)  # uncombined values
+
+
+def pair_filter(w: np.ndarray, rounding: float) -> FilterPairing:
+    """Algorithm 1 on one flattened filter ``w`` (K,).
+
+    Combination rule (lines 4–17):
+      PP.val ≥ |PN.val| + rounding → negative too small, mark PN uncombined
+      PP.val ≤ |PN.val| − rounding → positive too small, mark PP uncombined
+      otherwise                    → combine, advance both
+    Both lists are walked in ascending magnitude order.
+    """
+    w = np.asarray(w, dtype=np.float32).ravel()
+    res = FilterPairing()
+
+    pos = [(v, i) for i, v in enumerate(w) if v > 0]
+    neg = [(v, i) for i, v in enumerate(w) if v < 0]
+    zer = [(v, i) for i, v in enumerate(w) if v == 0]
+    pos.sort(key=lambda t: t[0])  # ascending value = ascending magnitude
+    neg.sort(key=lambda t: -t[0])  # ascending magnitude for negatives
+
+    pp, pn = 0, 0
+    while pp < len(pos) and pn < len(neg):
+        pv, pi = pos[pp]
+        nv, ni = neg[pn]
+        if pv >= -nv + rounding:  # negative weight too small
+            res.unp_idx.append(ni)
+            res.unp_w.append(nv)
+            pn += 1
+        elif pv <= -nv - rounding:  # positive weight too small
+            res.unp_idx.append(pi)
+            res.unp_w.append(pv)
+            pp += 1
+        else:  # combine
+            k = np.float32((pv + (-nv)) / 2.0)
+            res.pair_i1.append(pi)
+            res.pair_i2.append(ni)
+            res.pair_k.append(float(k))
+            pp += 1
+            pn += 1
+    # leftovers stay uncombined
+    for v, i in pos[pp:]:
+        res.unp_idx.append(i)
+        res.unp_w.append(v)
+    for v, i in neg[pn:]:
+        res.unp_idx.append(i)
+        res.unp_w.append(v)
+    for v, i in zer:
+        res.unp_idx.append(i)
+        res.unp_w.append(v)
+    return res
+
+
+def modified_weights(w: np.ndarray, rounding: float) -> np.ndarray:
+    """Snapped weight tensor: dense conv with this tensor is numerically
+    identical to the paired subtractor-form computation."""
+    cout = w.shape[0]
+    flat = w.reshape(cout, -1).astype(np.float32).copy()
+    for c in range(cout):
+        p = pair_filter(flat[c], rounding)
+        for i1, i2, k in zip(p.pair_i1, p.pair_i2, p.pair_k):
+            flat[c, i1] = k
+            flat[c, i2] = -k
+    return flat.reshape(w.shape)
+
+
+def padded_pairing(w: np.ndarray, rounding: float, pmax=None, umax=None):
+    """Per-layer padded arrays for the subconv kernels.
+
+    Returns (pair_i1, pair_i2, pair_k, unp_idx, unp_w) with shapes
+    (Cout, Pmax) / (Cout, Umax); k = 0 and w = 0 mark padding (index 0 is
+    used as a harmless dummy gather target).
+    """
+    cout = w.shape[0]
+    k_len = int(np.prod(w.shape[1:]))
+    pairs = [pair_filter(w.reshape(cout, -1)[c], rounding) for c in range(cout)]
+    pmax = pmax if pmax is not None else max(1, max(len(p.pair_k) for p in pairs))
+    umax = umax if umax is not None else max(1, max(len(p.unp_w) for p in pairs))
+    i1 = np.zeros((cout, pmax), np.int32)
+    i2 = np.zeros((cout, pmax), np.int32)
+    pk = np.zeros((cout, pmax), np.float32)
+    iu = np.zeros((cout, umax), np.int32)
+    wu = np.zeros((cout, umax), np.float32)
+    for c, p in enumerate(pairs):
+        npair, nunp = len(p.pair_k), len(p.unp_w)
+        assert npair <= pmax and nunp <= umax, "padding sizes too small"
+        assert 2 * npair + nunp == k_len, "pairing lost weights"
+        i1[c, :npair] = p.pair_i1
+        i2[c, :npair] = p.pair_i2
+        pk[c, :npair] = p.pair_k
+        iu[c, :nunp] = p.unp_idx
+        wu[c, :nunp] = p.unp_w
+    return i1, i2, pk, iu, wu
+
+
+def count_ops(w: np.ndarray, out_positions: int, rounding: float):
+    """Per-inference op counts for one conv layer (paper Table 1 semantics).
+
+    Baseline: every weight costs 1 multiply + 1 accumulate-add per output
+    position.  Every combined pair replaces (2 mul + 2 add) with
+    (1 sub + 1 mul + 1 add).  Bias adds are not counted (the paper's
+    rounding-0 row is exactly the MAC count, 405 600 for LeNet-5).
+    """
+    cout = w.shape[0]
+    flat = w.reshape(cout, -1)
+    k_len = flat.shape[1]
+    pairs = sum(len(pair_filter(flat[c], rounding).pair_k) for c in range(cout))
+    base = cout * k_len * out_positions
+    subs = pairs * out_positions
+    muls = base - subs
+    adds = base - subs
+    return {"adds": adds, "subs": subs, "muls": muls, "total": adds + subs + muls}

@@ -1,0 +1,133 @@
+"""Synthetic MNIST substitute (DESIGN.md §3 substitution table).
+
+The image has no network access and no bundled MNIST, so we generate a
+procedural handwritten-digit look-alike: 7×5 glyph bitmaps rendered onto a
+28×28 canvas through a random affine map (translate / scale / rotate /
+shear), stroke-thickened, blurred, and noised.  The generator is
+numpy-only and fully seeded so python (training) and any future consumer
+reproduce the same data.
+
+If a real MNIST IDX directory is supplied (``--mnist DIR`` with the four
+classic files), it is used instead — the rest of the pipeline is
+byte-identical either way.
+"""
+
+from __future__ import annotations
+
+import gzip
+import os
+import struct
+
+import numpy as np
+
+# 7×5 glyphs, 1 = ink. Deliberately "handwriting-ish": distinct topologies
+# per digit so a small CNN has real features to learn.
+_GLYPHS = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def _glyph_array(d: int) -> np.ndarray:
+    return np.array([[int(c) for c in row] for row in _GLYPHS[d]], dtype=np.float32)
+
+
+def _render(digit: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one 28×28 image in [0, 1] via inverse-mapped bilinear affine."""
+    g = _glyph_array(digit)  # (7, 5)
+    gh, gw = g.shape
+    # random affine: rotation, log-scale, shear, translation
+    th = rng.uniform(-0.25, 0.25)  # ~±14°
+    sx = np.exp(rng.uniform(-0.15, 0.15)) * 3.2  # glyph-px → canvas-px
+    sy = np.exp(rng.uniform(-0.15, 0.15)) * 3.2
+    sh = rng.uniform(-0.2, 0.2)
+    tx = 14.0 + rng.uniform(-2.5, 2.5)
+    ty = 14.0 + rng.uniform(-2.5, 2.5)
+    c, s = np.cos(th), np.sin(th)
+    # forward map: glyph coords (centred) → canvas
+    fwd = np.array([[sx * c, -sy * (s + sh)], [sx * s, sy * c]])
+    inv = np.linalg.inv(fwd)
+    ys, xs = np.mgrid[0:28, 0:28].astype(np.float32)
+    u = inv[0, 0] * (xs - tx) + inv[0, 1] * (ys - ty) + (gw - 1) / 2.0
+    v = inv[1, 0] * (xs - tx) + inv[1, 1] * (ys - ty) + (gh - 1) / 2.0
+    # bilinear sample with zero padding
+    u0, v0 = np.floor(u).astype(int), np.floor(v).astype(int)
+    du, dv = u - u0, v - v0
+
+    def tap(vv, uu):
+        ok = (uu >= 0) & (uu < gw) & (vv >= 0) & (vv < gh)
+        return np.where(ok, g[np.clip(vv, 0, gh - 1), np.clip(uu, 0, gw - 1)], 0.0)
+
+    img = (
+        tap(v0, u0) * (1 - du) * (1 - dv)
+        + tap(v0, u0 + 1) * du * (1 - dv)
+        + tap(v0 + 1, u0) * (1 - du) * dv
+        + tap(v0 + 1, u0 + 1) * du * dv
+    )
+    # stroke thickening + blur: two 3×3 box passes
+    for _ in range(2):
+        p = np.pad(img, 1)
+        img = sum(
+            p[dy : dy + 28, dx : dx + 28] for dy in range(3) for dx in range(3)
+        ) / 4.5
+    img = np.clip(img, 0.0, 1.0)
+    img += rng.normal(0.0, 0.04, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """n images (n, 28, 28) f32 in [0,1] + labels (n,) u8, balanced classes."""
+    rng = np.random.default_rng(seed)
+    labels = (np.arange(n) % 10).astype(np.uint8)
+    rng.shuffle(labels)
+    imgs = np.stack([_render(int(d), rng) for d in labels])
+    return imgs, labels
+
+
+def _read_idx(path: str) -> np.ndarray:
+    op = gzip.open if path.endswith(".gz") else open
+    with op(path, "rb") as f:
+        magic = struct.unpack(">I", f.read(4))[0]
+        ndim = magic & 0xFF
+        dims = struct.unpack(f">{ndim}I", f.read(4 * ndim))
+        return np.frombuffer(f.read(), dtype=np.uint8).reshape(dims)
+
+
+def load_mnist_idx(d: str):
+    """Load the classic 4-file MNIST IDX layout from directory ``d``."""
+
+    def pick(stem):
+        for suf in ("", ".gz"):
+            p = os.path.join(d, stem + suf)
+            if os.path.exists(p):
+                return p
+        raise FileNotFoundError(stem)
+
+    xtr = _read_idx(pick("train-images-idx3-ubyte")).astype(np.float32) / 255.0
+    ytr = _read_idx(pick("train-labels-idx1-ubyte"))
+    xte = _read_idx(pick("t10k-images-idx3-ubyte")).astype(np.float32) / 255.0
+    yte = _read_idx(pick("t10k-labels-idx1-ubyte"))
+    return (xtr, ytr), (xte, yte)
+
+
+def dataset(train_n: int, test_n: int, seed: int, mnist_dir: str | None = None):
+    """(train_x, train_y), (test_x, test_y) — images (N, 28, 28) f32."""
+    if mnist_dir and os.path.isdir(mnist_dir):
+        (xtr, ytr), (xte, yte) = load_mnist_idx(mnist_dir)
+        return (xtr[:train_n], ytr[:train_n]), (xte[:test_n], yte[:test_n])
+    xtr, ytr = generate(train_n, seed)
+    xte, yte = generate(test_n, seed + 1)
+    return (xtr, ytr), (xte, yte)
+
+
+def pad32(x: np.ndarray) -> np.ndarray:
+    """28×28 → 32×32 zero-pad (LeNet-5's canonical input size)."""
+    return np.pad(x, ((0, 0), (2, 2), (2, 2)))

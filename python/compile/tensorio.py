@@ -1,0 +1,65 @@
+"""Tiny named-tensor container format shared with the rust side.
+
+One format for everything crossing the python→rust boundary (trained
+weights, datasets, golden inputs/outputs, pairing tables):
+
+    magic   b"STDI"
+    u32 LE  version (1)
+    u32 LE  tensor count
+    per tensor:
+        u16 LE  name length, then UTF-8 name
+        u8      dtype  (0 = f32, 1 = i32, 2 = u8)
+        u8      ndim
+        u32 LE  dims[ndim]
+        raw     data, little-endian, C order
+
+Mirrored by ``rust/src/data/tensorio.rs``; both sides have round-trip
+tests and the integration suite reads python-written files from rust.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"STDI"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        out: dict[str, np.ndarray] = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = _DTYPES[code]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * np.dtype(dt).itemsize), dtype=dt)
+            out[name] = data.reshape(dims).copy()
+        return out

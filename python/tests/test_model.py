@@ -1,0 +1,92 @@
+"""L2 model checks: shapes, path equivalence (pallas vs lax vs ref), and
+the trained-artifact contract (weights/golden files round-trip)."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, tensorio
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def rand_x(b, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(b, 1, 32, 32)).astype(np.float32)
+    )
+
+
+def test_param_shapes():
+    p = model.init_params(0)
+    assert set(p) == set(model.PARAM_NAMES)
+    for k, v in p.items():
+        assert v.shape == model.PARAM_SHAPES[k]
+        assert v.dtype == jnp.float32
+
+
+def test_forward_shapes():
+    p = model.init_params(1)
+    for b in (1, 2, 8):
+        assert model.lenet5(p, rand_x(b)).shape == (b, 10)
+        assert model.lenet5_train(p, rand_x(b)).shape == (b, 10)
+
+
+def test_three_paths_agree():
+    """pallas path ≡ lax.conv path ≡ pure-jnp ref path."""
+    p = model.init_params(2)
+    x = rand_x(4, 3)
+    a = np.asarray(model.lenet5(p, x))
+    b = np.asarray(model.lenet5_train(p, x))
+    c = np.asarray(ref.lenet5(p, x))
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(a, c, rtol=2e-4, atol=2e-4)
+
+
+def test_flat_wrapper_matches_dict():
+    p = model.init_params(4)
+    x = rand_x(2, 5)
+    flat = [p[n] for n in model.PARAM_NAMES]
+    (out,) = model.lenet5_flat(x, *flat)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(model.lenet5(p, x)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_conv_mac_count_is_405600():
+    """The Table-1 baseline is fixed by geometry; pin it here."""
+    total = 0
+    for name, (wkey, pos) in model.CONV_LAYERS.items():
+        shape = model.PARAM_SHAPES[wkey]
+        total += int(np.prod(shape)) * pos
+    assert total == 405600
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "weights.bin")), reason="run make artifacts"
+)
+def test_trained_weights_roundtrip_and_goldens():
+    w = tensorio.load(os.path.join(ART, "weights.bin"))
+    assert set(w) == set(model.PARAM_NAMES)
+    params = {k: jnp.asarray(v) for k, v in w.items()}
+    g = tensorio.load(os.path.join(ART, "golden.bin"))
+    logits = np.asarray(ref.lenet5(params, jnp.asarray(g["inputs"])))
+    np.testing.assert_allclose(logits, g["logits"], rtol=2e-4, atol=2e-4)
+    # the golden logits must classify sensibly (trained net, not noise)
+    assert (logits.argmax(-1) == g["logits"].argmax(-1)).all()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "dataset.bin")), reason="run make artifacts"
+)
+def test_dataset_artifact_sane():
+    d = tensorio.load(os.path.join(ART, "dataset.bin"))
+    imgs, labels = d["images"], d["labels"]
+    assert imgs.dtype == np.uint8 and labels.dtype == np.uint8
+    assert imgs.shape[1:] == (28, 28)
+    assert imgs.shape[0] == labels.shape[0] >= 1000
+    assert labels.max() <= 9
+    # all ten classes present
+    assert len(np.unique(labels)) == 10

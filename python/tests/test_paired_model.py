@@ -1,0 +1,55 @@
+"""Fully-paired LeNet-5 graph (the serving artifact where the subtractor
+datapath IS the model): equivalence vs dense-modified, and lowering."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, preprocess as pp
+
+
+def build_args(params, x, rounding):
+    args = [x]
+    mod = dict(params)
+    for name in ("c1", "c3", "c5"):
+        cout, pmax, umax = model.PAIRED_TABLE_SIZES[name]
+        wt = np.asarray(params[f"{name}_w"])
+        i1, i2, pk, iu, wu = pp.padded_pairing(wt, rounding, pmax, umax)
+        args += [
+            jnp.asarray(i1), jnp.asarray(i2), jnp.asarray(pk),
+            jnp.asarray(iu), jnp.asarray(wu), params[f"{name}_b"],
+        ]
+        mod[f"{name}_w"] = jnp.asarray(pp.modified_weights(wt, rounding))
+    args += [params["f6_w"], params["f6_b"], params["out_w"], params["out_b"]]
+    return args, mod
+
+
+@pytest.mark.parametrize("rounding", [0.0, 0.05, 0.3])
+def test_paired_full_model_matches_dense_modified(rounding):
+    params = model.init_params(5)
+    x = jnp.asarray(
+        np.random.default_rng(1).normal(size=(2, 1, 32, 32)).astype(np.float32)
+    )
+    args, mod = build_args(params, x, rounding)
+    (got,) = model.lenet5_paired_flat(*args)
+    want = model.lenet5_train(mod, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_paired_table_sizes_cover_worst_case():
+    # Pmax = K//2 is the theoretical max pair count per filter
+    for name, (cout, pmax, umax) in model.PAIRED_TABLE_SIZES.items():
+        shape = model.PARAM_SHAPES[f"{name}_w"]
+        k = int(np.prod(shape[1:]))
+        assert shape[0] == cout
+        assert pmax == k // 2
+        assert umax == k
+
+
+def test_paired_lowering_has_all_args():
+    text = aot.lower_paired_lenet5(1)
+    assert "HloModule" in text
+    entry = text[text.index("ENTRY ") :]
+    body = entry[: entry.index("\n}")]
+    # 1 image + 3 layers × 6 tables + 4 head tensors
+    assert body.count(" parameter(") == 1 + 18 + 4

@@ -1,0 +1,129 @@
+"""Algorithm-1 preprocessor properties (numpy reference implementation).
+
+The same invariants are property-tested on the rust side; this file pins
+the semantics the two implementations must share.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import preprocess as pp
+
+
+def rand_w(n, seed):
+    return np.random.default_rng(seed).normal(size=n).astype(np.float32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 200), rounding=st.floats(0, 2), seed=st.integers(0, 2**31 - 1))
+def test_conservation(n, rounding, seed):
+    """No weight is lost or duplicated: 2·pairs + unpaired = K."""
+    w = rand_w(n, seed)
+    p = pp.pair_filter(w, rounding)
+    assert 2 * len(p.pair_k) + len(p.unp_w) == n
+    used = sorted(p.pair_i1 + p.pair_i2 + p.unp_idx)
+    assert used == list(range(n))
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 200), rounding=st.floats(0, 2), seed=st.integers(0, 2**31 - 1))
+def test_pairs_within_rounding(n, rounding, seed):
+    """Every combined pair satisfies | |Ka| − |Kb| | < rounding and the
+    snapped magnitude is the mean, so the per-weight error < rounding/2."""
+    w = rand_w(n, seed)
+    p = pp.pair_filter(w, rounding)
+    for i1, i2, k in zip(p.pair_i1, p.pair_i2, p.pair_k):
+        ka, kb = w[i1], w[i2]
+        assert ka > 0 and kb < 0
+        assert abs(ka - (-kb)) < rounding
+        assert abs(k - ka) <= rounding / 2 + 1e-6
+        assert abs(k - (-kb)) <= rounding / 2 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 100), rounding=st.floats(0.001, 2), seed=st.integers(0, 2**31 - 1))
+def test_signs_preserved(n, rounding, seed):
+    """Snapping never flips a weight's sign (k is a mean of two positives)."""
+    w = rand_w(n, seed)
+    wm = pp.modified_weights(w.reshape(1, -1), rounding).ravel()
+    assert np.all(np.sign(wm) == np.sign(w))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 120), seed=st.integers(0, 2**31 - 1))
+def test_monotone_in_rounding(n, seed):
+    """Larger rounding ⇒ at least as many pairs (Table 1 monotonicity)."""
+    w = rand_w(n, seed)
+    prev = -1
+    for r in [0.0, 0.01, 0.05, 0.1, 0.3, 1.0, 10.0]:
+        cur = len(pp.pair_filter(w, r).pair_k)
+        assert cur >= prev
+        prev = cur
+
+
+def test_exact_opposites_snap_to_noop():
+    """Weights that are already exact ± pairs (with magnitudes separated by
+    more than `rounding`, so no cross-pairing is possible) must pass
+    through the preprocessor unchanged — the snap is exact for them."""
+    mags = np.array([0.2, 0.6, 1.0, 1.4], np.float32)  # gaps 0.4 > rounding
+    w = np.concatenate([mags, -mags]).astype(np.float32)
+    r = 0.1
+    p = pp.pair_filter(w, r)
+    assert len(p.pair_k) == len(mags)
+    wm = pp.modified_weights(w.reshape(1, -1), r).ravel()
+    np.testing.assert_array_equal(wm, w)
+
+
+def test_second_pass_error_stays_bounded():
+    """Pairing is not idempotent (a snapped weight may re-pair with a new
+    partner) but each pass moves any weight by at most rounding/2, so two
+    passes stay within rounding of the originals."""
+    w = rand_w(60, 5)
+    r = 0.1
+    wm = pp.modified_weights(w.reshape(1, -1), r).ravel()
+    wm2 = pp.modified_weights(wm.reshape(1, -1), r).ravel()
+    assert np.abs(wm - w).max() <= r / 2 + 1e-6
+    assert np.abs(wm2 - w).max() <= r + 1e-6
+    # pair count never decreases on a snapped tensor
+    assert len(pp.pair_filter(wm, r).pair_k) >= len(pp.pair_filter(w, r).pair_k)
+
+
+def test_opcount_table1_semantics():
+    """Op-count identity: adds = muls = base − subs; subs = pairs × usage."""
+    w = rand_w(2 * 25, 9).reshape(2, 25)  # 2 filters of 25 weights
+    r = 0.2
+    pairs = sum(len(pp.pair_filter(w[c], r).pair_k) for c in range(2))
+    usage = 49
+    ops = pp.count_ops(w.reshape(2, 1, 5, 5), usage, r)
+    base = 2 * 25 * usage
+    assert ops["subs"] == pairs * usage
+    assert ops["muls"] == ops["adds"] == base - ops["subs"]
+    assert ops["total"] == 2 * base - ops["subs"]
+
+
+def test_opcount_rounding_zero_lenet_c1():
+    """LeNet C1 at rounding 0: 117 600 MACs (Table 1 decomposition)."""
+    w = rand_w(6 * 25, 1).reshape(6, 1, 5, 5)
+    ops = pp.count_ops(w, 28 * 28, 0.0)
+    assert ops == {
+        "adds": 117600, "subs": 0, "muls": 117600, "total": 235200
+    }
+
+
+def test_zero_weights_stay_uncombined():
+    w = np.array([0.0, 0.5, -0.5, 0.0], np.float32)
+    p = pp.pair_filter(w, 0.1)
+    assert len(p.pair_k) == 1
+    assert sorted(p.unp_idx) == [0, 3]
+    assert all(v == 0.0 for i, v in zip(p.unp_idx, p.unp_w))
+
+
+def test_boundary_exclusive():
+    """Paper's conditions are ≥ / ≤: a gap of exactly `rounding` does NOT
+    combine (strict interior required)."""
+    w = np.array([0.5, -0.4], np.float32)
+    # |0.5 - 0.4| = 0.1; rounding = 0.1 → PP.val >= |PN.val| + rounding → no pair
+    p = pp.pair_filter(w, 0.1)
+    assert len(p.pair_k) == 0
+    p = pp.pair_filter(w, 0.1000001)
+    assert len(p.pair_k) == 1

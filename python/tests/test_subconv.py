@@ -1,0 +1,85 @@
+"""Subtractor-form conv kernel: the paper's eq. (1) must be numerically
+invisible — paired computation ≡ dense conv with the modified weights."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import preprocess as pp
+from compile.kernels import ref, subconv
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+def _check_equivalence(b, cin, h, w, cout, k, rounding, seed):
+    x = jnp.asarray(rand((b, cin, h, w), seed))
+    wt = rand((cout, cin, k, k), seed + 1)
+    bias = jnp.asarray(rand((cout,), seed + 2))
+
+    wmod = pp.modified_weights(wt, rounding)
+    i1, i2, pk, iu, wu = pp.padded_pairing(wt, rounding)
+
+    dense = ref.conv2d(x, jnp.asarray(wmod), bias)
+    r_sub = ref.subconv2d(x, i1, i2, pk, iu, wu, bias, k, k)
+    p_sub = subconv.subconv2d(x, i1, i2, pk, iu, wu, bias, k, k)
+
+    np.testing.assert_allclose(np.asarray(r_sub), np.asarray(dense), RTOL, ATOL)
+    np.testing.assert_allclose(np.asarray(p_sub), np.asarray(dense), RTOL, ATOL)
+
+
+@pytest.mark.parametrize("rounding", [0.0, 0.0001, 0.01, 0.05, 0.1, 0.3, 10.0])
+def test_equivalence_rounding_sweep(rounding):
+    _check_equivalence(2, 3, 10, 10, 5, 4, rounding, 42)
+
+
+@pytest.mark.parametrize(
+    "b,cin,h,w,cout,k",
+    [
+        (1, 1, 32, 32, 6, 5),   # LeNet C1
+        (1, 6, 14, 14, 16, 5),  # LeNet C3
+        (1, 16, 5, 5, 120, 5),  # LeNet C5
+    ],
+)
+def test_equivalence_lenet_geometry(b, cin, h, w, cout, k):
+    _check_equivalence(b, cin, h, w, cout, k, 0.05, 7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    cin=st.integers(1, 3),
+    extra=st.integers(0, 4),
+    cout=st.integers(1, 6),
+    k=st.integers(1, 4),
+    rounding=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_equivalence_hypothesis(cin, extra, cout, k, rounding, seed):
+    h = w = k + extra
+    _check_equivalence(1, cin, h, w, cout, k, rounding, seed)
+
+
+def test_rounding_zero_is_identity():
+    """rounding = 0 must leave the network bit-identical (Table 1 row 0:
+    zero subtractions, original weights untouched)."""
+    wt = rand((4, 3, 5, 5), 3)
+    wmod = pp.modified_weights(wt, 0.0)
+    np.testing.assert_array_equal(wmod, wt)
+    i1, i2, pk, iu, wu = pp.padded_pairing(wt, 0.0)
+    assert np.all(pk == 0.0)
+
+
+def test_huge_rounding_pairs_everything_possible():
+    """rounding → ∞ pairs min(#pos, #neg) weights per filter."""
+    wt = rand((3, 2, 4, 4), 11)
+    cout = wt.shape[0]
+    flat = wt.reshape(cout, -1)
+    for c in range(cout):
+        p = pp.pair_filter(flat[c], 1e9)
+        npos = int((flat[c] > 0).sum())
+        nneg = int((flat[c] < 0).sum())
+        assert len(p.pair_k) == min(npos, nneg)

@@ -1,0 +1,50 @@
+"""Synthetic-MNIST generator: determinism, value ranges, class structure."""
+
+import numpy as np
+
+from compile import synth_mnist
+
+
+def test_deterministic():
+    a, la = synth_mnist.generate(40, seed=3)
+    b, lb = synth_mnist.generate(40, seed=3)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_seed_changes_data():
+    a, _ = synth_mnist.generate(10, seed=1)
+    b, _ = synth_mnist.generate(10, seed=2)
+    assert not np.array_equal(a, b)
+
+
+def test_shapes_and_range():
+    x, y = synth_mnist.generate(30, seed=0)
+    assert x.shape == (30, 28, 28) and x.dtype == np.float32
+    assert y.shape == (30,) and y.dtype == np.uint8
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert x.max() > 0.3  # ink actually present
+
+
+def test_balanced_classes():
+    _, y = synth_mnist.generate(100, seed=5)
+    counts = np.bincount(y, minlength=10)
+    assert (counts == 10).all()
+
+
+def test_classes_are_distinguishable():
+    """Mean images of different digits must differ substantially — the
+    substitution argument (DESIGN.md §3) needs learnable structure."""
+    x, y = synth_mnist.generate(200, seed=8)
+    means = np.stack([x[y == d].mean(0) for d in range(10)])
+    for a in range(10):
+        for b in range(a + 1, 10):
+            assert np.abs(means[a] - means[b]).mean() > 0.01
+
+
+def test_pad32():
+    x, _ = synth_mnist.generate(4, seed=0)
+    p = synth_mnist.pad32(x)
+    assert p.shape == (4, 32, 32)
+    assert (p[:, :2, :] == 0).all() and (p[:, :, :2] == 0).all()
+    np.testing.assert_array_equal(p[:, 2:30, 2:30], x)

@@ -1,0 +1,67 @@
+"""tensorio round-trip + format-edge tests (wire contract with rust)."""
+
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tensorio
+
+
+def test_roundtrip_mixed(tmp_path):
+    p = str(tmp_path / "t.bin")
+    data = {
+        "f": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "i": np.array([[-1, 2], [3, -4]], np.int32),
+        "u": np.arange(255, dtype=np.uint8),
+        "scalarish": np.array([3.5], np.float32),
+    }
+    tensorio.save(p, data)
+    out = tensorio.load(p)
+    assert set(out) == set(data)
+    for k in data:
+        np.testing.assert_array_equal(out[k], data[k])
+        assert out[k].dtype == data[k].dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ndim=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_hypothesis(tmp_path_factory, ndim, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(x) for x in rng.integers(1, 6, ndim))
+    arr = rng.normal(size=shape).astype(np.float32)
+    p = str(tmp_path_factory.mktemp("tio") / "t.bin")
+    tensorio.save(p, {"x": arr})
+    np.testing.assert_array_equal(tensorio.load(p)["x"], arr)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = str(tmp_path / "bad.bin")
+    with open(p, "wb") as f:
+        f.write(b"NOPE" + struct.pack("<II", 1, 0))
+    with pytest.raises(ValueError, match="bad magic"):
+        tensorio.load(p)
+
+
+def test_bad_version_rejected(tmp_path):
+    p = str(tmp_path / "bad.bin")
+    with open(p, "wb") as f:
+        f.write(tensorio.MAGIC + struct.pack("<II", 99, 0))
+    with pytest.raises(ValueError, match="version"):
+        tensorio.load(p)
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    p = str(tmp_path / "t.bin")
+    with pytest.raises(TypeError):
+        tensorio.save(p, {"d": np.zeros(3, np.float64)})
+
+
+def test_empty_dict_roundtrip(tmp_path):
+    p = str(tmp_path / "e.bin")
+    tensorio.save(p, {})
+    assert tensorio.load(p) == {}

@@ -1,0 +1,43 @@
+"""Build-time trainer: convergence on a tiny run + export contract."""
+
+import numpy as np
+
+from compile import model, tensorio, train
+
+
+def test_adam_step_reduces_loss():
+    import jax
+    import jax.numpy as jnp
+
+    params = model.init_params(0)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 1, 32, 32)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, 16).astype(np.int32))
+    l0 = float(train.cross_entropy(params, x, y))
+    t = 0
+    for _ in range(10):
+        t += 1
+        params, m, v, loss = train.adam_step(params, m, v, jnp.float32(t), x, y)
+    l1 = float(train.cross_entropy(params, x, y))
+    assert l1 < l0, f"loss did not drop: {l0} -> {l1}"
+
+
+def test_tiny_training_run_converges_and_exports(tmp_path):
+    params, test_raw, xte32, yte, curve = train.train(
+        train_n=512, test_n=128, epochs=2, batch=64, seed=11, log=lambda *_: None
+    )
+    assert len(curve) == 2 and curve[1] < curve[0]
+    acc = train.accuracy(params, xte32, yte)
+    assert acc > 0.5, f"tiny run should beat chance by far, got {acc}"
+
+    out = str(tmp_path)
+    train.export(out, params, test_raw, xte32, yte, curve)
+    w = tensorio.load(f"{out}/weights.bin")
+    assert set(w) == set(model.PARAM_NAMES)
+    g = tensorio.load(f"{out}/golden.bin")
+    assert g["inputs"].shape == (32, 1, 32, 32)
+    assert g["logits"].shape == (32, 10)
+    d = tensorio.load(f"{out}/dataset.bin")
+    assert d["images"].shape[0] == d["labels"].shape[0] == 128

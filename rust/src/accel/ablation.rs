@@ -1,0 +1,146 @@
+//! Ablation: alternative pairing policies for Algorithm 1.
+//!
+//! The paper's two-pointer walk pairs weights in ascending-magnitude
+//! order and snaps each pair to its mean. Two natural questions a
+//! hardware team would ask before taping out:
+//!
+//! 1. *Does the greedy walk leave pairs on the table?* — compare against
+//!    a closest-gap-first matcher ([`pair_filter_closest_first`]).
+//! 2. *Does pairing order matter for accuracy?* — closest-first minimizes
+//!    per-pair snap error locally; the two-pointer maximizes coverage.
+//!
+//! `benches/ablation_matching.rs` runs both policies over the trained
+//! model and reports pairs / total snap error / accuracy per rounding.
+
+use super::preprocess::FilterPairing;
+
+/// Closest-gap-first matching: enumerate all (pos, neg) candidates whose
+/// magnitude gap is inside the rounding window, take them greedily in
+/// ascending-gap order while both endpoints are free.
+///
+/// O(P·N log(P·N)) per filter — fine offline for K ≤ a few thousand.
+pub fn pair_filter_closest_first(w: &[f32], rounding: f32) -> FilterPairing {
+    let mut res = FilterPairing::default();
+    let mut pos: Vec<(f32, u32)> = Vec::new();
+    let mut neg: Vec<(f32, u32)> = Vec::new();
+    for (i, &v) in w.iter().enumerate() {
+        if v > 0.0 {
+            pos.push((v, i as u32));
+        } else if v < 0.0 {
+            neg.push((v, i as u32));
+        } else {
+            res.unp_idx.push(i as u32);
+            res.unp_w.push(v);
+        }
+    }
+    // candidate edges inside the window, sorted by gap
+    let mut edges: Vec<(f32, usize, usize)> = Vec::new();
+    for (pi, &(pv, _)) in pos.iter().enumerate() {
+        for (ni, &(nv, _)) in neg.iter().enumerate() {
+            let gap = (pv - (-nv)).abs();
+            if gap < rounding {
+                edges.push((gap, pi, ni));
+            }
+        }
+    }
+    edges.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut pos_used = vec![false; pos.len()];
+    let mut neg_used = vec![false; neg.len()];
+    for (_, pi, ni) in edges {
+        if pos_used[pi] || neg_used[ni] {
+            continue;
+        }
+        pos_used[pi] = true;
+        neg_used[ni] = true;
+        let (pv, pidx) = pos[pi];
+        let (nv, nidx) = neg[ni];
+        res.pair_i1.push(pidx);
+        res.pair_i2.push(nidx);
+        res.pair_k.push((pv + (-nv)) / 2.0);
+    }
+    for (used, list) in [(&pos_used, &pos), (&neg_used, &neg)] {
+        for (u, &(v, i)) in used.iter().zip(list.iter()) {
+            if !u {
+                res.unp_idx.push(i);
+                res.unp_w.push(v);
+            }
+        }
+    }
+    res
+}
+
+/// Total snap error of a pairing: Σ |k − |w|| over both pair members.
+pub fn total_snap_error(w: &[f32], p: &FilterPairing) -> f64 {
+    let mut e = 0.0f64;
+    for j in 0..p.n_pairs() {
+        let k = p.pair_k[j] as f64;
+        e += (k - w[p.pair_i1[j] as usize] as f64).abs();
+        e += (k + w[p.pair_i2[j] as usize] as f64).abs();
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::pair_filter;
+    use crate::util::forall;
+
+    #[test]
+    fn conservation_and_window() {
+        forall("closest-first invariants", 0xAB1A, 120, |g| {
+            let w = g.weights(120, 1.0);
+            let r = g.rng.range(0.0, 0.5);
+            let p = pair_filter_closest_first(&w, r);
+            if 2 * p.n_pairs() + p.n_unpaired() != w.len() {
+                return Err("weight count not conserved".into());
+            }
+            for j in 0..p.n_pairs() {
+                let ka = w[p.pair_i1[j] as usize];
+                let kb = w[p.pair_i2[j] as usize];
+                if !(ka > 0.0 && kb < 0.0 && (ka + kb).abs() < r) {
+                    return Err(format!("bad pair ({ka}, {kb}) at rounding {r}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn two_pointer_never_finds_fewer_pairs() {
+        // The paper's two-pointer walk is a maximum matching for this
+        // interval structure; closest-first is at best equal.
+        forall("two-pointer optimality", 0xAB1B, 120, |g| {
+            let w = g.weights(100, 1.0);
+            let r = g.rng.range(0.0, 0.5);
+            let a = pair_filter(&w, r).n_pairs();
+            let b = pair_filter_closest_first(&w, r).n_pairs();
+            if a < b {
+                return Err(format!("two-pointer found {a} pairs, closest-first {b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn closest_first_min_gap_on_triples() {
+        // pos 0.50 can pair with −0.48 (gap .02) or −0.55 (gap .05);
+        // closest-first must take the .02 partner
+        let w = [0.50f32, -0.48, -0.55];
+        let p = pair_filter_closest_first(&w, 0.1);
+        assert_eq!(p.n_pairs(), 1);
+        assert_eq!(p.pair_i2[0], 1);
+        // the paper's walk (ascending magnitude) pairs 0.50 with −0.48 too
+        let q = pair_filter(&w, 0.1);
+        assert_eq!(q.n_pairs(), 1);
+    }
+
+    #[test]
+    fn snap_error_metric() {
+        let w = [0.5f32, -0.4];
+        let p = pair_filter_closest_first(&w, 0.2);
+        assert_eq!(p.n_pairs(), 1);
+        // k = 0.45; error = |0.45-0.5| + |0.45-0.4| = 0.1
+        assert!((total_snap_error(&w, &p) - 0.1).abs() < 1e-6);
+    }
+}

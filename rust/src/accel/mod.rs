@@ -1,0 +1,25 @@
+//! The paper's contribution: weight preprocessing (Section III-A,
+//! Algorithm 1) and the modified convolution unit (Section III-B).
+//!
+//! * [`preprocess`] — sort → split ± → two-pointer combine within a
+//!   rounding size; produces [`FilterPairing`]s / [`LayerPairing`]s and
+//!   snapped ("modified") weight tensors.
+//! * [`subconv`] — executes convolution on the paired representation:
+//!   combined weights go through the subtractor lane (`k·(I1−I2)`),
+//!   uncombined weights through the ordinary MAC lane. Numerically
+//!   identical to dense conv with modified weights (unit + prop tested).
+//! * [`opcount`] — Table-1 accounting over a whole model for a rounding
+//!   sweep.
+//! * [`stats`] — weight-distribution statistics (Fig 3 / Fig 4).
+
+mod ablation;
+mod opcount;
+mod preprocess;
+mod stats;
+mod subconv;
+
+pub use ablation::{pair_filter_closest_first, total_snap_error};
+pub use opcount::{model_op_sweep, model_ops, ModelOps, TABLE1_ROUNDINGS};
+pub use preprocess::{pair_filter, FilterPairing, LayerPairing, WeightClass};
+pub use stats::{histogram, Histogram, WeightStats};
+pub use subconv::SubConv2d;

@@ -1,0 +1,95 @@
+//! Table-1 accounting: run Algorithm 1 over every conv layer of a model
+//! and tally additions / subtractions / multiplications per inference for
+//! a sweep of rounding sizes. This module *regenerates the paper's
+//! Table 1 and Fig 7* (via `benches/table1_opcounts.rs` and the CLI).
+
+use super::preprocess::LayerPairing;
+use crate::nn::{Model, OpCounts};
+
+/// The rounding sizes of the paper's Table 1.
+pub const TABLE1_ROUNDINGS: [f32; 13] = [
+    0.0, 0.0001, 0.005, 0.01, 0.015, 0.02, 0.025, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3,
+];
+
+/// One row of the reproduced Table 1.
+#[derive(Debug, Clone)]
+pub struct ModelOps {
+    pub rounding: f32,
+    pub adds: u64,
+    pub subs: u64,
+    pub muls: u64,
+    pub total: u64,
+    /// Per-layer `(name, pairs, weights)` detail.
+    pub layers: Vec<(String, u64, u64)>,
+}
+
+/// Conv-layer op counts for one rounding size (Table-1 semantics: conv
+/// layers only, one inference, MAC = 1 mul + 1 add, bias excluded).
+pub fn model_ops(model: &Model, input_shape: &[usize], rounding: f32) -> ModelOps {
+    let mut total = OpCounts::default();
+    let mut layers = Vec::new();
+    for info in model.conv_layers(input_shape) {
+        let pairing = LayerPairing::from_weights(&info.weight, rounding);
+        let pairs = pairing.total_pairs() as u64;
+        let weights = info.weight.len() as u64;
+        let unpaired = weights - 2 * pairs;
+        total += OpCounts::paired_layer(pairs, unpaired, info.out_positions as u64, 0);
+        layers.push((info.name, pairs, weights));
+    }
+    ModelOps {
+        rounding,
+        adds: total.adds,
+        subs: total.subs,
+        muls: total.muls,
+        total: total.table1_total(),
+        layers,
+    }
+}
+
+/// Full Table-1 sweep.
+pub fn model_op_sweep(model: &Model, input_shape: &[usize], roundings: &[f32]) -> Vec<ModelOps> {
+    roundings.iter().map(|&r| model_ops(model, input_shape, r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::lenet5;
+
+    #[test]
+    fn rounding_zero_row_matches_paper_exactly() {
+        // Table 1, row 0: 405600 adds, 0 subs, 405600 muls, 811200 total.
+        let row = model_ops(&lenet5(), &[1, 1, 32, 32], 0.0);
+        assert_eq!(row.adds, 405_600);
+        assert_eq!(row.subs, 0);
+        assert_eq!(row.muls, 405_600);
+        assert_eq!(row.total, 811_200);
+    }
+
+    #[test]
+    fn table1_identities_hold_for_all_rows() {
+        let rows = model_op_sweep(&lenet5(), &[1, 1, 32, 32], &TABLE1_ROUNDINGS);
+        for row in &rows {
+            assert_eq!(row.adds, row.muls, "rounding {}", row.rounding);
+            assert_eq!(row.adds + row.subs, 405_600);
+            assert_eq!(row.total, 811_200 - row.subs);
+        }
+    }
+
+    #[test]
+    fn sweep_is_monotone() {
+        let rows = model_op_sweep(&lenet5(), &[1, 1, 32, 32], &TABLE1_ROUNDINGS);
+        for w in rows.windows(2) {
+            assert!(w[1].subs >= w[0].subs);
+            assert!(w[1].total <= w[0].total);
+        }
+    }
+
+    #[test]
+    fn per_layer_detail_sums() {
+        let row = model_ops(&lenet5(), &[1, 1, 32, 32], 0.1);
+        assert_eq!(row.layers.len(), 3);
+        let weights: u64 = row.layers.iter().map(|(_, _, w)| w).sum();
+        assert_eq!(weights, 150 + 2400 + 48_000);
+    }
+}

@@ -1,0 +1,276 @@
+//! Algorithm 1 — the weight preprocessor.
+//!
+//! Per conv filter (output channel): sort the weights, split into a
+//! positive and a negative list (paper Fig 6), then walk both lists in
+//! ascending magnitude with two pointers `PP` / `PN`:
+//!
+//! ```text
+//! PP.val ≥ |PN.val| + rounding  →  negative too small: mark uncombined, ++PN
+//! PP.val ≤ |PN.val| − rounding  →  positive too small: mark uncombined, ++PP
+//! otherwise                     →  combine, ++PP, ++PN
+//! ```
+//!
+//! A combined pair `(Ka, Kb)` is snapped to the mean magnitude
+//! `k = (Ka + |Kb|)/2` so `Kb = −Ka` holds exactly and inference may use
+//! `k · (I1 − I2)` (paper eq. 1). Per-weight error ≤ `rounding / 2`.
+//!
+//! Cross-validated against the numpy reference
+//! (`python/compile/preprocess.py`) through shared artifacts, and
+//! property-tested in `rust/tests/prop_preprocess.rs`.
+
+use crate::tensor::Tensor;
+
+/// Status of one weight after preprocessing (the paper's `U` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightClass {
+    /// Combined into a subtractor pair.
+    Combined,
+    /// Left on the ordinary MAC path.
+    Uncombined,
+}
+
+/// Pairing of one filter's weights (flat indices into the filter).
+#[derive(Debug, Clone, Default)]
+pub struct FilterPairing {
+    /// Flat index of the positive member of each pair.
+    pub pair_i1: Vec<u32>,
+    /// Flat index of the negative member of each pair.
+    pub pair_i2: Vec<u32>,
+    /// Snapped magnitude `k` of each pair.
+    pub pair_k: Vec<f32>,
+    /// Flat indices of uncombined weights.
+    pub unp_idx: Vec<u32>,
+    /// Values of uncombined weights (unchanged).
+    pub unp_w: Vec<f32>,
+}
+
+impl FilterPairing {
+    pub fn n_pairs(&self) -> usize {
+        self.pair_k.len()
+    }
+
+    pub fn n_unpaired(&self) -> usize {
+        self.unp_w.len()
+    }
+
+    /// Per-weight status vector (for the paper's flag bookkeeping).
+    pub fn classes(&self, k_len: usize) -> Vec<WeightClass> {
+        let mut c = vec![WeightClass::Uncombined; k_len];
+        for &i in self.pair_i1.iter().chain(&self.pair_i2) {
+            c[i as usize] = WeightClass::Combined;
+        }
+        c
+    }
+}
+
+/// Run Algorithm 1 on one flattened filter.
+pub fn pair_filter(w: &[f32], rounding: f32) -> FilterPairing {
+    let mut res = FilterPairing::default();
+    // sort + split (paper Fig 6); ascending magnitude for both lists
+    let mut pos: Vec<(f32, u32)> = Vec::new();
+    let mut neg: Vec<(f32, u32)> = Vec::new();
+    for (i, &v) in w.iter().enumerate() {
+        if v > 0.0 {
+            pos.push((v, i as u32));
+        } else if v < 0.0 {
+            neg.push((v, i as u32));
+        } else {
+            res.unp_idx.push(i as u32);
+            res.unp_w.push(v);
+        }
+    }
+    pos.sort_by(|a, b| a.0.total_cmp(&b.0));
+    neg.sort_by(|a, b| b.0.total_cmp(&a.0)); // -0.1 before -0.9
+
+    let (mut pp, mut pn) = (0usize, 0usize);
+    while pp < pos.len() && pn < neg.len() {
+        let (pv, pi) = pos[pp];
+        let (nv, ni) = neg[pn];
+        let nmag = -nv;
+        if pv >= nmag + rounding {
+            // negative weight too small — no future positive will be closer
+            res.unp_idx.push(ni);
+            res.unp_w.push(nv);
+            pn += 1;
+        } else if pv <= nmag - rounding {
+            // positive weight too small
+            res.unp_idx.push(pi);
+            res.unp_w.push(pv);
+            pp += 1;
+        } else {
+            res.pair_i1.push(pi);
+            res.pair_i2.push(ni);
+            res.pair_k.push((pv + nmag) / 2.0);
+            pp += 1;
+            pn += 1;
+        }
+    }
+    for &(v, i) in &pos[pp..] {
+        res.unp_idx.push(i);
+        res.unp_w.push(v);
+    }
+    for &(v, i) in &neg[pn..] {
+        res.unp_idx.push(i);
+        res.unp_w.push(v);
+    }
+    res
+}
+
+/// Pairing of a whole conv layer `(Cout, Cin, kh, kw)`.
+#[derive(Debug, Clone)]
+pub struct LayerPairing {
+    pub filters: Vec<FilterPairing>,
+    /// Flat weights-per-filter (Cin·kh·kw).
+    pub k_len: usize,
+    /// Weight tensor shape this pairing was derived from.
+    pub shape: Vec<usize>,
+    /// Rounding size used.
+    pub rounding: f32,
+}
+
+impl LayerPairing {
+    /// Run Algorithm 1 over every filter of a conv weight tensor.
+    pub fn from_weights(w: &Tensor, rounding: f32) -> Self {
+        assert!(w.ndim() >= 2, "conv weights must be at least 2-D");
+        assert!(rounding >= 0.0, "rounding must be non-negative");
+        let cout = w.shape()[0];
+        let k_len: usize = w.shape()[1..].iter().product();
+        let filters = (0..cout)
+            .map(|c| pair_filter(&w.data()[c * k_len..(c + 1) * k_len], rounding))
+            .collect();
+        Self { filters, k_len, shape: w.shape().to_vec(), rounding }
+    }
+
+    /// Total combined pairs across all filters.
+    pub fn total_pairs(&self) -> usize {
+        self.filters.iter().map(FilterPairing::n_pairs).sum()
+    }
+
+    /// Snapped ("modified") weight tensor: dense conv with this tensor is
+    /// numerically identical to the paired computation.
+    pub fn modified_weights(&self, w: &Tensor) -> Tensor {
+        assert_eq!(w.shape(), self.shape.as_slice(), "pairing/weights mismatch");
+        let mut out = w.clone();
+        let data = out.data_mut();
+        for (c, f) in self.filters.iter().enumerate() {
+            let base = c * self.k_len;
+            for j in 0..f.n_pairs() {
+                data[base + f.pair_i1[j] as usize] = f.pair_k[j];
+                data[base + f.pair_i2[j] as usize] = -f.pair_k[j];
+            }
+        }
+        out
+    }
+
+    /// Maximum per-weight snap error (must be ≤ rounding/2).
+    pub fn max_snap_error(&self, w: &Tensor) -> f32 {
+        self.modified_weights(w).max_abs_diff(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_opposites_pair_with_zero_error() {
+        let w = [0.5f32, -0.5, 0.25, -0.25];
+        let p = pair_filter(&w, 0.01);
+        assert_eq!(p.n_pairs(), 2);
+        assert_eq!(p.n_unpaired(), 0);
+        // smallest magnitudes pair first
+        assert_eq!(p.pair_k, vec![0.25, 0.5]);
+        assert_eq!((p.pair_i1[0], p.pair_i2[0]), (2, 3));
+        assert_eq!((p.pair_i1[1], p.pair_i2[1]), (0, 1));
+    }
+
+    #[test]
+    fn rounding_zero_pairs_nothing_random() {
+        let w = [0.5f32, -0.5000001, 0.3, -0.2];
+        let p = pair_filter(&w, 0.0);
+        assert_eq!(p.n_pairs(), 0);
+        assert_eq!(p.n_unpaired(), 4);
+    }
+
+    #[test]
+    fn boundary_is_exclusive() {
+        // gap exactly == rounding → the ≥ / ≤ conditions fire, no pair
+        let p = pair_filter(&[0.5, -0.4], 0.1);
+        assert_eq!(p.n_pairs(), 0);
+        let p = pair_filter(&[0.5, -0.4], 0.100001);
+        assert_eq!(p.n_pairs(), 1);
+        assert!((p.pair_k[0] - 0.45).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zeros_are_uncombined() {
+        let p = pair_filter(&[0.0, 0.3, -0.3, 0.0], 0.05);
+        assert_eq!(p.n_pairs(), 1);
+        assert_eq!(p.n_unpaired(), 2);
+        assert!(p.unp_w.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn snap_error_bounded() {
+        let w: Vec<f32> = (0..100)
+            .map(|i| ((i * 2654435761u64 as usize) % 1000) as f32 / 500.0 - 1.0)
+            .collect();
+        let t = Tensor::new(&[4, 25], w);
+        for r in [0.01f32, 0.05, 0.2, 1.0] {
+            let p = LayerPairing::from_weights(&t, r);
+            assert!(
+                p.max_snap_error(&t) <= r / 2.0 + 1e-6,
+                "rounding {r}: err {}",
+                p.max_snap_error(&t)
+            );
+        }
+    }
+
+    #[test]
+    fn conservation_no_weight_lost() {
+        let w: Vec<f32> = (0..60).map(|i| (i as f32 - 30.0) / 17.0).collect();
+        let p = pair_filter(&w, 0.2);
+        assert_eq!(2 * p.n_pairs() + p.n_unpaired(), 60);
+        let mut seen: Vec<u32> = p
+            .pair_i1
+            .iter()
+            .chain(&p.pair_i2)
+            .chain(&p.unp_idx)
+            .copied()
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..60).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn classes_flagging() {
+        let p = pair_filter(&[0.5, -0.5, 0.1], 0.01);
+        let c = p.classes(3);
+        assert_eq!(c[0], WeightClass::Combined);
+        assert_eq!(c[1], WeightClass::Combined);
+        assert_eq!(c[2], WeightClass::Uncombined);
+    }
+
+    #[test]
+    fn monotone_pairs_in_rounding() {
+        let w: Vec<f32> = (0..80).map(|i| ((i * 37) % 100) as f32 / 50.0 - 1.0).collect();
+        let mut prev = 0;
+        for r in [0.0f32, 0.01, 0.05, 0.1, 0.5, 2.0] {
+            let n = pair_filter(&w, r).n_pairs();
+            assert!(n >= prev, "rounding {r}: {n} < {prev}");
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn layer_pairing_modified_weights() {
+        let t = Tensor::new(&[1, 4], vec![0.5, -0.52, 0.1, -0.9]);
+        let p = LayerPairing::from_weights(&t, 0.05);
+        assert_eq!(p.total_pairs(), 1);
+        let m = p.modified_weights(&t);
+        assert!((m.data()[0] - 0.51).abs() < 1e-6);
+        assert!((m.data()[1] + 0.51).abs() < 1e-6);
+        assert_eq!(m.data()[2], 0.1);
+        assert_eq!(m.data()[3], -0.9);
+    }
+}

@@ -1,0 +1,129 @@
+//! Weight-distribution statistics — reproduces the paper's motivation
+//! figures: Fig 3 (weight values of LeNet-5's third conv layer) and
+//! Fig 4 (their histogram). The paper's argument rests on the near-
+//! symmetry of the trained distribution around zero; [`WeightStats`]
+//! quantifies it.
+
+
+/// Histogram over a symmetric range.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn bin_width(&self) -> f32 {
+        (self.hi - self.lo) / self.counts.len() as f32
+    }
+
+    /// Render one text row per bin: `[lo, hi)  count  ###…` (CLI output).
+    pub fn render(&self, max_width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut s = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let lo = self.lo + self.bin_width() * i as f32;
+            let bar = "#".repeat((c as usize * max_width) / max as usize);
+            s.push_str(&format!("{:>8.3} .. {:>8.3} {:>8} {}\n", lo, lo + self.bin_width(), c, bar));
+        }
+        s
+    }
+}
+
+/// Build a histogram of `values` over `[lo, hi)` with `bins` bins; values
+/// outside the range clamp into the end bins.
+pub fn histogram(values: &[f32], lo: f32, hi: f32, bins: usize) -> Histogram {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0u64; bins];
+    let w = (hi - lo) / bins as f32;
+    for &v in values {
+        let idx = (((v - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        counts[idx] += 1;
+    }
+    Histogram { lo, hi, counts }
+}
+
+/// Symmetry / pairability statistics of a weight distribution.
+#[derive(Debug, Clone)]
+pub struct WeightStats {
+    pub n: usize,
+    pub n_pos: usize,
+    pub n_neg: usize,
+    pub n_zero: usize,
+    pub mean: f32,
+    pub std: f32,
+    pub min: f32,
+    pub max: f32,
+    /// min(n_pos, n_neg) / (n/2) — upper bound on the pairable fraction.
+    pub max_pairable_frac: f32,
+}
+
+impl WeightStats {
+    pub fn compute(values: &[f32]) -> Self {
+        let n = values.len();
+        assert!(n > 0, "empty weight slice");
+        let n_pos = values.iter().filter(|&&v| v > 0.0).count();
+        let n_neg = values.iter().filter(|&&v| v < 0.0).count();
+        let n_zero = n - n_pos - n_neg;
+        let mean = values.iter().sum::<f32>() / n as f32;
+        let var = values.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+        let min = values.iter().copied().fold(f32::INFINITY, f32::min);
+        let max = values.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        WeightStats {
+            n,
+            n_pos,
+            n_neg,
+            n_zero,
+            mean,
+            std: var.sqrt(),
+            min,
+            max,
+            max_pairable_frac: n_pos.min(n_neg) as f32 / (n as f32 / 2.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins() {
+        // bins: [-1,-.5) [-.5,0) [0,.5) [.5,1) → -1→0, -0.5→1, 0→2, {0.5,0.99}→3
+        let h = histogram(&[-1.0, -0.5, 0.0, 0.5, 0.99], -1.0, 1.0, 4);
+        assert_eq!(h.counts, vec![1, 1, 1, 2]);
+        assert!((h.bin_width() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_clamps_outliers() {
+        let h = histogram(&[-99.0, 99.0], -1.0, 1.0, 2);
+        assert_eq!(h.counts, vec![1, 1]);
+    }
+
+    #[test]
+    fn stats_symmetric_distribution() {
+        let vals: Vec<f32> = (1..=50).flat_map(|i| [i as f32 / 50.0, -(i as f32) / 50.0]).collect();
+        let s = WeightStats::compute(&vals);
+        assert_eq!(s.n_pos, 50);
+        assert_eq!(s.n_neg, 50);
+        assert!((s.mean).abs() < 1e-6);
+        assert!((s.max_pairable_frac - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_skewed_distribution() {
+        let vals = [1.0f32, 2.0, 3.0, -1.0];
+        let s = WeightStats::compute(&vals);
+        assert_eq!(s.n_pos, 3);
+        assert_eq!(s.n_neg, 1);
+        assert!((s.max_pairable_frac - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn render_is_line_per_bin() {
+        let h = histogram(&[0.1, 0.2], 0.0, 1.0, 5);
+        assert_eq!(h.render(10).lines().count(), 5);
+    }
+}

@@ -1,0 +1,206 @@
+//! The modified convolution unit (paper Section III-B, Fig 5).
+//!
+//! Executes a conv layer on the *paired* weight representation: each
+//! combined pair computes `k · (I1 − I2)` — one subtraction replacing one
+//! multiply + one add — and each uncombined weight takes the ordinary
+//! multiply-accumulate lane. Exact op accounting comes out with the
+//! result; numerics are identical to dense conv with the snapped weights
+//! (verified against [`crate::nn::layers::conv2d`] in tests and against
+//! the Pallas artifact in the integration suite).
+
+use super::preprocess::LayerPairing;
+use crate::nn::OpCounts;
+use crate::tensor::{im2col, Tensor};
+
+/// A conv layer compiled to the subtractor representation.
+#[derive(Debug, Clone)]
+pub struct SubConv2d {
+    pairing: LayerPairing,
+    bias: Tensor,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+}
+
+impl SubConv2d {
+    /// Preprocess a dense conv layer (`weight (Cout, Cin, kh, kw)`,
+    /// `bias (Cout,)`) at the given rounding size.
+    pub fn compile(weight: &Tensor, bias: &Tensor, rounding: f32) -> Self {
+        assert_eq!(weight.ndim(), 4, "conv weight must be OIHW");
+        let cout = weight.shape()[0];
+        assert_eq!(bias.len(), cout, "bias length");
+        Self {
+            pairing: LayerPairing::from_weights(weight, rounding),
+            bias: bias.clone(),
+            kh: weight.shape()[2],
+            kw: weight.shape()[3],
+            cout,
+        }
+    }
+
+    /// Wrap an existing pairing (e.g. deserialized from disk).
+    pub fn from_pairing(pairing: LayerPairing, bias: Tensor) -> Self {
+        let cout = pairing.shape[0];
+        let (kh, kw) = (pairing.shape[2], pairing.shape[3]);
+        Self { pairing, bias, kh, kw, cout }
+    }
+
+    pub fn pairing(&self) -> &LayerPairing {
+        &self.pairing
+    }
+
+    /// Total combined pairs across filters.
+    pub fn total_pairs(&self) -> usize {
+        self.pairing.total_pairs()
+    }
+
+    /// Run the layer on an NCHW input (valid, stride 1 — LeNet geometry).
+    ///
+    /// Hot path layout: one im2col per layer, then per output position the
+    /// pair lane walks `(i1, i2, k)` triples and the MAC lane walks
+    /// `(idx, w)` pairs — exactly the schedule the PE array in
+    /// [`crate::hw::pe`] models.
+    pub fn forward(&self, x: &Tensor) -> (Tensor, OpCounts) {
+        let ic = im2col(x, self.kh, self.kw);
+        let rows = ic.patches.shape()[0];
+        let k = ic.k;
+        assert_eq!(k, self.pairing.k_len, "input channels/kernel mismatch");
+        let mut out = vec![0f32; rows * self.cout];
+        let patches = ic.patches.data();
+
+        // Loop order: rows outer, filters inner (§Perf iteration 3) — each
+        // patch is loaded once and stays in L1 across all 16–120 filters.
+        for r in 0..rows {
+            let patch = &patches[r * k..(r + 1) * k];
+            for (c, f) in self.pairing.filters.iter().enumerate() {
+                let bias = self.bias.data()[c];
+                // subtractor lane: zipped triples avoid per-element bounds
+                // checks on the pairing arrays (§Perf iteration 2)
+                let pair_acc: f32 = f
+                    .pair_i1
+                    .iter()
+                    .zip(&f.pair_i2)
+                    .zip(&f.pair_k)
+                    .map(|((&i1, &i2), &kv)| kv * (patch[i1 as usize] - patch[i2 as usize]))
+                    .sum();
+                // ordinary MAC lane
+                let mac_acc: f32 = f
+                    .unp_idx
+                    .iter()
+                    .zip(&f.unp_w)
+                    .map(|(&iu, &wv)| wv * patch[iu as usize])
+                    .sum();
+                out[r * self.cout + c] = bias + pair_acc + mac_acc;
+            }
+        }
+
+        // (rows, Cout) → (B, Cout, OH, OW)
+        let (b, oh, ow) = (ic.batch, ic.out_h, ic.out_w);
+        let mut nchw = vec![0f32; out.len()];
+        for bi in 0..b {
+            for y in 0..oh {
+                for xw in 0..ow {
+                    let r = (bi * oh + y) * ow + xw;
+                    for c in 0..self.cout {
+                        nchw[((bi * self.cout + c) * oh + y) * ow + xw] =
+                            out[r * self.cout + c];
+                    }
+                }
+            }
+        }
+
+        let pairs: u64 = self.pairing.total_pairs() as u64;
+        let unpaired: u64 =
+            self.pairing.filters.iter().map(|f| f.n_unpaired() as u64).sum();
+        let counts = OpCounts::paired_layer(
+            pairs,
+            unpaired,
+            (b * oh * ow) as u64,
+            (b * oh * ow * self.cout) as u64,
+        );
+        (Tensor::new(&[b, self.cout, oh, ow], nchw), counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::conv2d;
+    use crate::util::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+    }
+
+    #[test]
+    fn matches_dense_with_modified_weights() {
+        let mut rng = Rng::seed_from_u64(11);
+        for &rounding in &[0.0f32, 0.01, 0.05, 0.2, 5.0] {
+            let x = rand_t(&mut rng, &[2, 3, 9, 9]);
+            let w = rand_t(&mut rng, &[5, 3, 4, 4]);
+            let b = rand_t(&mut rng, &[5]);
+            let sc = SubConv2d::compile(&w, &b, rounding);
+            let (got, counts) = sc.forward(&x);
+            let wmod = sc.pairing().modified_weights(&w);
+            let (want, base_counts) = conv2d(&x, &wmod, &b, 1, 0);
+            assert!(
+                got.max_abs_diff(&want) < 1e-5,
+                "rounding {rounding}: {}",
+                got.max_abs_diff(&want)
+            );
+            // op identity: subs replaced muls/adds one-for-one
+            assert_eq!(counts.muls + counts.subs, base_counts.muls);
+            assert_eq!(counts.adds + counts.subs, base_counts.adds);
+        }
+    }
+
+    #[test]
+    fn rounding_zero_is_bit_identical_to_dense() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = rand_t(&mut rng, &[1, 2, 6, 6]);
+        let w = rand_t(&mut rng, &[3, 2, 3, 3]);
+        let b = rand_t(&mut rng, &[3]);
+        let sc = SubConv2d::compile(&w, &b, 0.0);
+        assert_eq!(sc.total_pairs(), 0);
+        let (got, counts) = sc.forward(&x);
+        let (want, _) = conv2d(&x, &w, &b, 1, 0);
+        // same weights; summation order differs → tiny f32 tolerance
+        assert!(got.max_abs_diff(&want) < 1e-5);
+        assert_eq!(counts.subs, 0);
+    }
+
+    #[test]
+    fn lenet_c1_geometry_counts() {
+        let mut rng = Rng::seed_from_u64(9);
+        let x = rand_t(&mut rng, &[1, 1, 32, 32]);
+        let w = rand_t(&mut rng, &[6, 1, 5, 5]);
+        let b = Tensor::zeros(&[6]);
+        let sc = SubConv2d::compile(&w, &b, 0.1);
+        let (y, counts) = sc.forward(&x);
+        assert_eq!(y.shape(), &[1, 6, 28, 28]);
+        let base = 6 * 25 * 784u64;
+        assert_eq!(counts.subs, sc.total_pairs() as u64 * 784);
+        assert_eq!(counts.muls, base - counts.subs);
+        assert_eq!(counts.adds, counts.muls);
+    }
+
+    #[test]
+    fn batch_independence() {
+        // forwarding a batch == forwarding images separately
+        let mut rng = Rng::seed_from_u64(5);
+        let x0 = rand_t(&mut rng, &[1, 2, 7, 7]);
+        let x1 = rand_t(&mut rng, &[1, 2, 7, 7]);
+        let w = rand_t(&mut rng, &[4, 2, 3, 3]);
+        let b = rand_t(&mut rng, &[4]);
+        let sc = SubConv2d::compile(&w, &b, 0.05);
+        let mut xb = x0.data().to_vec();
+        xb.extend_from_slice(x1.data());
+        let (yb, _) = sc.forward(&Tensor::new(&[2, 2, 7, 7], xb));
+        let (y0, _) = sc.forward(&x0);
+        let (y1, _) = sc.forward(&x1);
+        let half = yb.len() / 2;
+        assert_eq!(&yb.data()[..half], y0.data());
+        assert_eq!(&yb.data()[half..], y1.data());
+    }
+}

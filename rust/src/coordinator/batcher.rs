@@ -1,0 +1,101 @@
+//! Dynamic batching policy, kept pure for unit testing: decide when a
+//! pending set of requests should be flushed into an executor batch.
+
+use std::time::{Duration, Instant};
+
+/// Outcome of a batching decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPlan {
+    /// Keep waiting (queue not full, deadline not reached).
+    Wait,
+    /// Flush the current pending requests now.
+    Flush,
+}
+
+/// Size-or-deadline batching policy.
+///
+/// A batch is flushed when it reaches `max_batch` items, or when the
+/// oldest pending item has waited `max_wait`. An empty queue never
+/// flushes.
+#[derive(Debug, Clone, Copy)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0, "max_batch must be positive");
+        Self { max_batch, max_wait }
+    }
+
+    /// Decide given the current queue depth and the arrival time of the
+    /// oldest pending request.
+    pub fn decide(&self, pending: usize, oldest: Option<Instant>, now: Instant) -> BatchPlan {
+        if pending == 0 {
+            return BatchPlan::Wait;
+        }
+        if pending >= self.max_batch {
+            return BatchPlan::Flush;
+        }
+        match oldest {
+            Some(t) if now.duration_since(t) >= self.max_wait => BatchPlan::Flush,
+            _ => BatchPlan::Wait,
+        }
+    }
+
+    /// Deadline at which the current oldest request forces a flush.
+    pub fn deadline(&self, oldest: Option<Instant>) -> Option<Instant> {
+        oldest.map(|t| t + self.max_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b() -> Batcher {
+        Batcher::new(4, Duration::from_millis(10))
+    }
+
+    #[test]
+    fn empty_never_flushes() {
+        let now = Instant::now();
+        assert_eq!(b().decide(0, None, now), BatchPlan::Wait);
+        assert_eq!(b().decide(0, None, now + Duration::from_secs(60)), BatchPlan::Wait);
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let now = Instant::now();
+        assert_eq!(b().decide(4, Some(now), now), BatchPlan::Flush);
+        assert_eq!(b().decide(9, Some(now), now), BatchPlan::Flush);
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let t0 = Instant::now();
+        let late = t0 + Duration::from_millis(11);
+        assert_eq!(b().decide(2, Some(t0), t0), BatchPlan::Wait);
+        assert_eq!(b().decide(2, Some(t0), late), BatchPlan::Flush);
+    }
+
+    #[test]
+    fn deadline_exact_boundary_flushes() {
+        let t0 = Instant::now();
+        assert_eq!(b().decide(1, Some(t0), t0 + Duration::from_millis(10)), BatchPlan::Flush);
+    }
+
+    #[test]
+    fn deadline_accessor() {
+        let t0 = Instant::now();
+        assert_eq!(b().deadline(None), None);
+        assert_eq!(b().deadline(Some(t0)), Some(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_batch_rejected() {
+        Batcher::new(0, Duration::ZERO);
+    }
+}

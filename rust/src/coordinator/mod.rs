@@ -1,0 +1,25 @@
+//! L3 serving coordinator: async request router + dynamic batcher in
+//! front of the PJRT executor.
+//!
+//! Architecture (vLLM-router-like, scaled to this workload):
+//!
+//! ```text
+//!  clients ──▶ bounded queue ──▶ batcher task ──▶ worker thread (actor,
+//!    classify()     │   (backpressure)  │          owns PJRT executor)
+//!    oneshot ◀──────┴──────── replies ◀─┴─────────────┘
+//! ```
+//!
+//! * The batcher groups requests up to the artifact's compiled batch size
+//!   or a deadline (`max_wait`), padding partial batches — classic
+//!   dynamic batching.
+//! * The PJRT client is not `Send`/`Sync`, so the executor lives on one
+//!   dedicated worker thread; batches cross via a channel (actor pattern).
+//! * Rounding variants are installed by swapping cached weight literals —
+//!   the artifact takes weights as arguments, so variant switches never
+//!   recompile.
+
+mod batcher;
+mod server;
+
+pub use batcher::{BatchPlan, Batcher};
+pub use server::{Coordinator, ServeConfig};

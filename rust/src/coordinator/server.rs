@@ -1,0 +1,344 @@
+//! The coordinator proper: request intake, dynamic batching, the executor
+//! actor thread, variant management, and metrics.
+//!
+//! Built on std threads + channels (the offline vendor set has no async
+//! runtime): a bounded `sync_channel` provides backpressure at intake, a
+//! batcher thread implements the size-or-deadline policy, and the PJRT
+//! executor (not `Send`) lives on its own actor thread.
+
+use super::batcher::{BatchPlan, Batcher};
+use crate::data::load_weights;
+use crate::metrics::ServerMetrics;
+use crate::runtime::{LeNet5Executor, Runtime, Variant};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory holding `*.hlo.txt` + `weights.bin`.
+    pub artifacts_dir: PathBuf,
+    /// Which artifact family to execute.
+    pub variant: Variant,
+    /// Compiled batch size (an artifact must exist for it: 1, 8 or 32).
+    pub batch_size: usize,
+    /// Max time a request waits for batch-mates.
+    pub max_wait: Duration,
+    /// Bound on queued requests before rejection (backpressure).
+    pub queue_cap: usize,
+    /// Initial rounding size (0 = original weights).
+    pub rounding: f32,
+    /// Replicated executor workers (each owns a PJRT client + compiled
+    /// artifact and pulls batches from a shared queue). >1 pays off on
+    /// multi-core hosts; on this 1-core testbed it validates the
+    /// architecture, not throughput.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            variant: Variant::XlaNative,
+            batch_size: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+            rounding: 0.0,
+            workers: 1,
+        }
+    }
+}
+
+/// Receiver side of a pending classification.
+pub type LogitsRx = mpsc::Receiver<Result<Vec<f32>>>;
+
+/// One classification request travelling through the pipeline.
+struct Request {
+    image: Tensor,
+    submitted: Instant,
+    reply: mpsc::SyncSender<Result<Vec<f32>>>,
+}
+
+/// A batch travelling from the batcher to whichever worker grabs it.
+struct WorkBatch {
+    images: Tensor,
+    replies: Vec<Request>,
+}
+
+/// Per-worker control messages (broadcast by the coordinator).
+enum Ctl {
+    SetRounding { rounding: f32, reply: mpsc::SyncSender<Result<usize>> },
+}
+
+/// Handle to a running coordinator. Clone-free; share via `Arc`.
+pub struct Coordinator {
+    tx: mpsc::SyncSender<Request>,
+    ctls: Vec<mpsc::Sender<Ctl>>,
+    metrics: Arc<ServerMetrics>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the pipeline: executor actor thread + batcher thread.
+    pub fn start(cfg: ServeConfig) -> Result<Self> {
+        let metrics = Arc::new(ServerMetrics::new());
+        let n_workers = cfg.workers.max(1);
+        let (req_tx, req_rx) = mpsc::sync_channel::<Request>(cfg.queue_cap);
+        let (work_tx, work_rx) = mpsc::channel::<WorkBatch>();
+        let shared_rx = Arc::new(std::sync::Mutex::new(work_rx));
+
+        // --- executor workers: each owns its (non-Send) PJRT state -------
+        let mut workers = Vec::with_capacity(n_workers);
+        let mut ctls = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let (ctl_tx, ctl_rx) = mpsc::channel::<Ctl>();
+            let wcfg = cfg.clone();
+            let wmetrics = metrics.clone();
+            let wshared = shared_rx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pjrt-executor-{w}"))
+                .spawn(move || worker_loop(wcfg, wshared, ctl_rx, init_tx, wmetrics))
+                .context("spawn executor thread")?;
+            init_rx
+                .recv()
+                .map_err(|_| anyhow!("executor thread {w} died during init"))??;
+            workers.push(handle);
+            ctls.push(ctl_tx);
+        }
+
+        // --- batcher thread ----------------------------------------------
+        let policy = Batcher::new(cfg.batch_size, cfg.max_wait);
+        let bmetrics = metrics.clone();
+        let batch_size = cfg.batch_size;
+        let batcher = std::thread::Builder::new()
+            .name("batcher".into())
+            .spawn(move || batcher_loop(policy, batch_size, req_rx, work_tx, bmetrics))
+            .context("spawn batcher thread")?;
+
+        Ok(Self { tx: req_tx, ctls, metrics, batcher: Some(batcher), workers })
+    }
+
+    /// Submit one `(1, 1, 32, 32)` image; returns a receiver that resolves
+    /// to 10 logits. Fails fast when the queue is full (backpressure).
+    pub fn submit(&self, image: Tensor) -> Result<LogitsRx> {
+        if image.shape() != [1, 1, 32, 32] {
+            bail!("expected (1,1,32,32) input, got {:?}", image.shape());
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::sync_channel(1);
+        let req = Request { image, submitted: Instant::now(), reply };
+        if self.tx.try_send(req).is_err() {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("queue full: backpressure rejection");
+        }
+        Ok(rx)
+    }
+
+    /// Blocking classify convenience.
+    pub fn classify(&self, image: Tensor) -> Result<Vec<f32>> {
+        self.submit(image)?
+            .recv()
+            .map_err(|_| anyhow!("pipeline dropped request"))?
+    }
+
+    /// Install the rounding variant (preprocess + swap weight literals) on
+    /// every worker. Returns the number of combined pairs. The variant is
+    /// fully installed on all replicas before this returns — later
+    /// requests are guaranteed the new weights.
+    pub fn set_rounding(&self, rounding: f32) -> Result<usize> {
+        let mut rxs = Vec::with_capacity(self.ctls.len());
+        for ctl in &self.ctls {
+            let (reply, rx) = mpsc::sync_channel(1);
+            ctl.send(Ctl::SetRounding { rounding, reply })
+                .map_err(|_| anyhow!("executor thread gone"))?;
+            rxs.push(rx);
+        }
+        let mut pairs = 0;
+        for rx in rxs {
+            pairs = rx.recv().map_err(|_| anyhow!("executor thread dropped reply"))??;
+        }
+        Ok(pairs)
+    }
+
+    pub fn metrics(&self) -> Arc<ServerMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Stop intake, drain, and join both threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // 1. close intake: swap our request sender for a dead one so the
+        //    batcher's recv() disconnects and it drains pending work
+        if let Some(h) = self.batcher.take() {
+            let (dead_tx, _) = mpsc::sync_channel(1);
+            let old = std::mem::replace(&mut self.tx, dead_tx);
+            drop(old);
+            let _ = h.join();
+        }
+        // 2. the batcher exiting dropped the work sender; workers drain
+        //    the shared queue, observe the disconnect, and return
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Executor worker: builds the runtime in-thread (PJRT state is !Send),
+/// then alternates between its control channel and the shared batch
+/// queue until the queue disconnects (shutdown).
+fn worker_loop(
+    cfg: ServeConfig,
+    shared: Arc<std::sync::Mutex<mpsc::Receiver<WorkBatch>>>,
+    ctl_rx: mpsc::Receiver<Ctl>,
+    init_tx: mpsc::SyncSender<Result<()>>,
+    metrics: Arc<ServerMetrics>,
+) {
+    type Built = (LeNet5Executor, std::collections::HashMap<String, Tensor>);
+    let built = (|| -> Result<Built> {
+        let rt = Runtime::cpu()?;
+        let base = load_weights(cfg.artifacts_dir.join("weights.bin"))?;
+        let mut exe =
+            LeNet5Executor::load(&rt, &cfg.artifacts_dir, cfg.variant, cfg.batch_size, &base)?;
+        if cfg.rounding > 0.0 {
+            exe.install_variant(&base, cfg.rounding)?;
+        }
+        Ok((exe, base))
+    })();
+    let (mut exe, base) = match built {
+        Ok(v) => {
+            let _ = init_tx.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        // control first: variant switches take effect before the next batch
+        while let Ok(Ctl::SetRounding { rounding, reply }) = ctl_rx.try_recv() {
+            let _ = reply.send(exe.install_variant(&base, rounding));
+        }
+        // pull one batch from the shared queue (short timeout so control
+        // messages stay responsive)
+        let msg = {
+            let guard = shared.lock().expect("work queue poisoned");
+            guard.recv_timeout(Duration::from_millis(5))
+        };
+        let WorkBatch { images, replies } = match msg {
+            Ok(b) => b,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        let t0 = Instant::now();
+        let result = exe.execute(&images);
+        metrics.execute_latency.record(t0.elapsed());
+        match result {
+            Ok(logits) => {
+                let n_classes = logits.shape()[1];
+                let data = logits.data();
+                for (i, req) in replies.into_iter().enumerate() {
+                    let row = data[i * n_classes..(i + 1) * n_classes].to_vec();
+                    metrics.e2e_latency.record(req.submitted.elapsed());
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                let msg = format!("execute failed: {e:#}");
+                for req in replies {
+                    let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Batcher thread: size-or-deadline grouping, zero-padding partial batches
+/// to the compiled batch size. Exits when the request channel closes.
+fn batcher_loop(
+    policy: Batcher,
+    batch_size: usize,
+    rx: mpsc::Receiver<Request>,
+    work_tx: mpsc::Sender<WorkBatch>,
+    metrics: Arc<ServerMetrics>,
+) {
+    let mut pending: Vec<Request> = Vec::with_capacity(batch_size);
+    let mut closed = false;
+    while !(closed && pending.is_empty()) {
+        if !closed {
+            let deadline = policy.deadline(pending.first().map(|r| r.submitted));
+            match deadline {
+                None => match rx.recv() {
+                    Ok(req) => pending.push(req),
+                    Err(_) => closed = true,
+                },
+                Some(d) => {
+                    let now = Instant::now();
+                    let wait = d.saturating_duration_since(now);
+                    match rx.recv_timeout(wait) {
+                        Ok(req) => pending.push(req),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                    }
+                }
+            }
+        }
+
+        let now = Instant::now();
+        let oldest = pending.first().map(|r| r.submitted);
+        let flush = match policy.decide(pending.len(), oldest, now) {
+            BatchPlan::Flush => true,
+            BatchPlan::Wait => closed && !pending.is_empty(), // drain on shutdown
+        };
+        if !flush {
+            continue;
+        }
+
+        let take = pending.len().min(batch_size);
+        let batch: Vec<Request> = pending.drain(..take).collect();
+        let mut data = Vec::with_capacity(batch_size * 32 * 32);
+        for r in &batch {
+            metrics.queue_latency.record(r.submitted.elapsed());
+            data.extend_from_slice(r.image.data());
+        }
+        data.resize(batch_size * 32 * 32, 0.0); // zero-pad to compiled size
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        let images = Tensor::new(&[batch_size, 1, 32, 32], data);
+        if work_tx.send(WorkBatch { images, replies: batch }).is_err() {
+            return; // executors gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_sane() {
+        let c = ServeConfig::default();
+        assert_eq!(c.batch_size, 8);
+        assert!(c.queue_cap >= c.batch_size);
+    }
+
+    // Full pipeline tests (require artifacts) live in rust/tests/.
+}

@@ -1,0 +1,187 @@
+//! Typed views over the python-produced artifacts:
+//! `weights.bin` (trained LeNet-5 parameters), `dataset.bin` (held-out
+//! test set) and `golden.bin` (cross-language reference I/O).
+
+use super::tensorio::{load_tensors, TensorEntry};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Held-out test set (28×28 u8 images + labels).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// (N, 28, 28) raw u8 images.
+    pub images: Vec<u8>,
+    pub labels: Vec<u8>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Dataset {
+    /// Image `i` as a normalized, 32×32 zero-padded NCHW tensor
+    /// `(1, 1, 32, 32)` — LeNet-5's canonical input.
+    pub fn image32(&self, i: usize) -> Tensor {
+        assert!(i < self.n, "image index {i} out of {}", self.n);
+        let mut out = vec![0f32; 32 * 32];
+        let src = &self.images[i * self.h * self.w..(i + 1) * self.h * self.w];
+        let (py, px) = ((32 - self.h) / 2, (32 - self.w) / 2);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                out[(y + py) * 32 + x + px] = src[y * self.w + x] as f32 / 255.0;
+            }
+        }
+        Tensor::new(&[1, 1, 32, 32], out)
+    }
+
+    /// A batch of images `[start, start+n)` as `(n, 1, 32, 32)`.
+    pub fn batch32(&self, start: usize, n: usize) -> Tensor {
+        let mut data = Vec::with_capacity(n * 32 * 32);
+        for i in start..start + n {
+            data.extend_from_slice(self.image32(i % self.n).data());
+        }
+        Tensor::new(&[n, 1, 32, 32], data)
+    }
+}
+
+/// Cross-language golden I/O: ref-path logits for 32 fixed inputs.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    /// (N, 1, 32, 32).
+    pub inputs: Tensor,
+    /// (N, 10).
+    pub logits: Tensor,
+    /// Training loss curve (one value per epoch) — the E2E training record.
+    pub loss_curve: Vec<f32>,
+}
+
+fn to_tensor(name: &str, e: &TensorEntry) -> Result<Tensor> {
+    let data = e
+        .data
+        .as_f32()
+        .with_context(|| format!("{name}: expected f32"))?
+        .to_vec();
+    Ok(Tensor::new(&e.shape, data))
+}
+
+/// Load trained LeNet-5 parameters keyed as in `python/compile/model.py`.
+pub fn load_weights(path: impl AsRef<Path>) -> Result<HashMap<String, Tensor>> {
+    let raw = load_tensors(&path)?;
+    let mut out = HashMap::new();
+    for (k, v) in &raw {
+        out.insert(k.clone(), to_tensor(k, v)?);
+    }
+    for required in [
+        "c1_w", "c1_b", "c3_w", "c3_b", "c5_w", "c5_b", "f6_w", "f6_b", "out_w", "out_b",
+    ] {
+        if !out.contains_key(required) {
+            bail!("weights file missing {required}");
+        }
+    }
+    Ok(out)
+}
+
+/// Load the held-out test set.
+pub fn load_dataset(path: impl AsRef<Path>) -> Result<Dataset> {
+    let raw = load_tensors(&path)?;
+    let images = raw.get("images").context("dataset missing 'images'")?;
+    let labels = raw.get("labels").context("dataset missing 'labels'")?;
+    if images.shape.len() != 3 {
+        bail!("images must be (N, H, W), got {:?}", images.shape);
+    }
+    let (n, h, w) = (images.shape[0], images.shape[1], images.shape[2]);
+    if labels.shape != [n] {
+        bail!("labels shape {:?} != [{n}]", labels.shape);
+    }
+    Ok(Dataset {
+        images: images.data.as_u8()?.to_vec(),
+        labels: labels.data.as_u8()?.to_vec(),
+        n,
+        h,
+        w,
+    })
+}
+
+/// Load the golden reference I/O.
+pub fn load_golden(path: impl AsRef<Path>) -> Result<Golden> {
+    let raw = load_tensors(&path)?;
+    let inputs = to_tensor("inputs", raw.get("inputs").context("golden missing inputs")?)?;
+    let logits = to_tensor("logits", raw.get("logits").context("golden missing logits")?)?;
+    let loss_curve = raw
+        .get("loss_curve")
+        .map(|e| e.data.as_f32().map(|v| v.to_vec()))
+        .transpose()?
+        .unwrap_or_default();
+    if inputs.shape()[0] != logits.shape()[0] {
+        bail!("golden inputs/logits batch mismatch");
+    }
+    Ok(Golden { inputs, logits, loss_curve })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tensorio::{save_tensors, TensorEntry};
+    use std::collections::BTreeMap;
+
+    fn tiny_dataset(dir: &std::path::Path) -> std::path::PathBuf {
+        let p = dir.join("ds.bin");
+        let mut m = BTreeMap::new();
+        // 2 images 28x28: all-zero and all-255
+        let mut imgs = vec![0u8; 28 * 28];
+        imgs.extend(vec![255u8; 28 * 28]);
+        m.insert("images".into(), TensorEntry::u8(&[2, 28, 28], imgs));
+        m.insert("labels".into(), TensorEntry::u8(&[2], vec![3, 8]));
+        save_tensors(&p, &m).unwrap();
+        p
+    }
+
+    #[test]
+    fn dataset_pad_and_normalize() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let ds = load_dataset(tiny_dataset(dir.path())).unwrap();
+        assert_eq!(ds.n, 2);
+        let t0 = ds.image32(0);
+        assert_eq!(t0.shape(), &[1, 1, 32, 32]);
+        assert!(t0.data().iter().all(|&v| v == 0.0));
+        let t1 = ds.image32(1);
+        // padding ring is zero, interior is 1.0
+        assert_eq!(t1.at(&[0, 0, 0, 0]), 0.0);
+        assert_eq!(t1.at(&[0, 0, 2, 2]), 1.0);
+        assert_eq!(t1.at(&[0, 0, 29, 29]), 1.0);
+        assert_eq!(t1.at(&[0, 0, 31, 31]), 0.0);
+    }
+
+    #[test]
+    fn batch_wraps_around() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let ds = load_dataset(tiny_dataset(dir.path())).unwrap();
+        let b = ds.batch32(1, 3); // images 1, 0, 1
+        assert_eq!(b.shape(), &[3, 1, 32, 32]);
+        assert_eq!(b.at(&[0, 0, 16, 16]), 1.0);
+        assert_eq!(b.at(&[1, 0, 16, 16]), 0.0);
+        assert_eq!(b.at(&[2, 0, 16, 16]), 1.0);
+    }
+
+    #[test]
+    fn missing_keys_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("empty.bin");
+        save_tensors(&p, &BTreeMap::new()).unwrap();
+        assert!(load_dataset(&p).is_err());
+        assert!(load_golden(&p).is_err());
+        assert!(load_weights(&p).is_err());
+    }
+
+    #[test]
+    fn weights_require_all_params() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("w.bin");
+        let mut m = BTreeMap::new();
+        m.insert("c1_w".into(), TensorEntry::f32(&[1], vec![0.0]));
+        save_tensors(&p, &m).unwrap();
+        let e = load_weights(&p).unwrap_err().to_string();
+        assert!(e.contains("missing"), "{e}");
+    }
+}

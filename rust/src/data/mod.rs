@@ -1,0 +1,9 @@
+//! Data plane: the STDI tensor-container codec shared with python, plus
+//! dataset/golden/weight loading helpers used by examples, tests, and the
+//! coordinator.
+
+mod dataset;
+mod tensorio;
+
+pub use dataset::{load_dataset, load_golden, load_weights, Dataset, Golden};
+pub use tensorio::{load_tensors, save_tensors, TensorData, TensorEntry};

@@ -1,0 +1,254 @@
+//! STDI named-tensor container — byte-for-byte mirror of
+//! `python/compile/tensorio.py`:
+//!
+//! ```text
+//! magic  b"STDI" | u32 version (=1) | u32 count
+//! entry: u16 name_len | name utf-8 | u8 dtype | u8 ndim | u32 dims[ndim] | raw LE
+//! dtype: 0 = f32, 1 = i32, 2 = u8
+//! ```
+//!
+//! Round-trip tested here; cross-language compatibility is covered by the
+//! integration test that reads python-written artifacts.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"STDI";
+const VERSION: u32 = 1;
+
+/// Typed payload of one entry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            TensorData::U8(v) => Ok(v),
+            _ => bail!("expected u8 tensor"),
+        }
+    }
+}
+
+/// One named tensor: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorEntry {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl TensorEntry {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn u8(shape: &[usize], data: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data: TensorData::U8(data) }
+    }
+}
+
+fn read_exact(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("truncated STDI file")?;
+    Ok(buf)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_exact(r, 4)?.try_into().unwrap()))
+}
+
+/// Load a whole container into a name-ordered map.
+pub fn load_tensors(path: impl AsRef<Path>) -> Result<BTreeMap<String, TensorEntry>> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let magic = read_exact(&mut f, 4)?;
+    if magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let count = read_u32(&mut f)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(read_exact(&mut f, 2)?.try_into().unwrap());
+        let name = String::from_utf8(read_exact(&mut f, nlen as usize)?)
+            .context("tensor name not utf-8")?;
+        let hdr = read_exact(&mut f, 2)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            0 => {
+                let raw = read_exact(&mut f, n * 4)?;
+                TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            1 => {
+                let raw = read_exact(&mut f, n * 4)?;
+                TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            2 => TensorData::U8(read_exact(&mut f, n)?),
+            d => bail!("{}: unknown dtype code {d} for {name}", path.display()),
+        };
+        out.insert(name, TensorEntry { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write a container (deterministic order: map iteration order).
+pub fn save_tensors(
+    path: impl AsRef<Path>,
+    tensors: &BTreeMap<String, TensorEntry>,
+) -> Result<()> {
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        let dtype = match t.data {
+            TensorData::F32(_) => 0u8,
+            TensorData::I32(_) => 1,
+            TensorData::U8(_) => 2,
+        };
+        f.write_all(&[dtype, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::U8(v) => f.write_all(v)?,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_dtypes() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("t.bin");
+        let mut m = BTreeMap::new();
+        m.insert("f".into(), TensorEntry::f32(&[2, 3], vec![1., -2., 3., 4., 5.5, -6.]));
+        m.insert("i".into(), TensorEntry::i32(&[4], vec![-1, 0, 7, i32::MAX]));
+        m.insert("u".into(), TensorEntry::u8(&[2, 2], vec![0, 127, 200, 255]));
+        save_tensors(&p, &m).unwrap();
+        let back = load_tensors(&p).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("bad.bin");
+        std::fs::write(&p, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        let e = load_tensors(&p).unwrap_err().to_string();
+        assert!(e.contains("bad magic"), "{e}");
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("v.bin");
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend(99u32.to_le_bytes());
+        bytes.extend(0u32.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let e = load_tensors(&p).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("t.bin");
+        let mut m = BTreeMap::new();
+        m.insert("x".into(), TensorEntry::f32(&[8], vec![0.0; 8]));
+        save_tensors(&p, &m).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 5]).unwrap();
+        let e = load_tensors(&p).unwrap_err().to_string();
+        assert!(e.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn empty_container() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("e.bin");
+        save_tensors(&p, &BTreeMap::new()).unwrap();
+        assert!(load_tensors(&p).unwrap().is_empty());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let t = TensorEntry::f32(&[1], vec![2.0]);
+        assert_eq!(t.data.as_f32().unwrap(), &[2.0]);
+        assert!(t.data.as_i32().is_err());
+        assert!(t.data.as_u8().is_err());
+    }
+}

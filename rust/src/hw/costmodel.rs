@@ -1,0 +1,122 @@
+//! Per-operation cost constants for IEEE-754 single-precision units.
+//!
+//! The paper synthesizes IEEE-754 add / sub / mul units with Synopsys DC
+//! on TSMC 65 nm at 1 GHz and reports *relative* savings. We cannot run
+//! DC here, so we substitute published per-op costs and keep the ratios —
+//! which fully determine the savings percentages — explicit:
+//!
+//! * Energy (Horowitz, ISSCC 2014, 45 nm): f32 add 0.9 pJ, f32 mul
+//!   3.7 pJ → ratio ≈ 4.1. The paper's headline (32.03 % power saved at
+//!   rounding 0.05 with 40.3 % of MACs paired) implies ratio ≈ 3.9 —
+//!   inside the same band. Scaling 45 → 65 nm multiplies both by ≈ the
+//!   same factor and cancels in every percentage we report.
+//! * Area (same source): f32 add 4184 µm², f32 mul 7700 µm² → ratio 1.84
+//!   (paper implies ≈ 1.6).
+//! * A subtractor is an adder with a negated operand: cost(sub) =
+//!   cost(add) — also the paper's premise.
+//! * Delay at 1 GHz: both units are pipelined to 1 cycle; the PE
+//!   simulator ([`super::pe`]) turns op mixes into cycles.
+
+
+/// Cost of a single arithmetic operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    /// Energy per operation, picojoules.
+    pub energy_pj: f64,
+    /// Area of the functional unit, µm².
+    pub area_um2: f64,
+    /// Pipeline latency in cycles at the model frequency.
+    pub latency_cycles: u32,
+}
+
+/// A full technology cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    pub name: &'static str,
+    pub frequency_ghz: f64,
+    pub add: OpCost,
+    pub sub: OpCost,
+    pub mul: OpCost,
+}
+
+impl CostModel {
+    /// Default model: published 45 nm f32 numbers (ratios are what matter;
+    /// see module docs). Frequency matches the paper's 1 GHz synthesis.
+    pub fn ieee754_f32() -> Self {
+        let add = OpCost { energy_pj: 0.9, area_um2: 4184.0, latency_cycles: 1 };
+        CostModel {
+            name: "ieee754-f32-45nm(horowitz-isscc14)",
+            frequency_ghz: 1.0,
+            add,
+            sub: add, // subtractor == adder with operand negation
+            mul: OpCost { energy_pj: 3.7, area_um2: 7700.0, latency_cycles: 1 },
+        }
+    }
+
+    /// Variant calibrated so the rounding-0.05 row reproduces the paper's
+    /// exact headline numbers (−32.03 % power, −24.59 % area at 40.30 %
+    /// paired). Used by the fig8 bench to show sensitivity to the ratios.
+    pub fn paper_calibrated() -> Self {
+        let add = OpCost { energy_pj: 1.0, area_um2: 1000.0, latency_cycles: 1 };
+        CostModel {
+            name: "paper-calibrated-65nm",
+            frequency_ghz: 1.0,
+            add,
+            sub: add,
+            // energy ratio 3.87, area ratio 1.566 — back-solved from the
+            // paper's 32.03 % / 24.59 % at pair fraction 0.40298
+            mul: OpCost { energy_pj: 3.87, area_um2: 1566.0, latency_cycles: 1 },
+        }
+    }
+
+    /// Energy of an op mix, picojoules.
+    pub fn energy_pj(&self, adds: u64, subs: u64, muls: u64) -> f64 {
+        adds as f64 * self.add.energy_pj
+            + subs as f64 * self.sub.energy_pj
+            + muls as f64 * self.mul.energy_pj
+    }
+
+    /// Datapath area for a unit mix (one functional unit per concurrent
+    /// op slot), µm².
+    pub fn area_um2(&self, add_units: u64, sub_units: u64, mul_units: u64) -> f64 {
+        add_units as f64 * self.add.area_um2
+            + sub_units as f64 * self.sub.area_um2
+            + mul_units as f64 * self.mul.area_um2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_dominates_add() {
+        for m in [CostModel::ieee754_f32(), CostModel::paper_calibrated()] {
+            assert!(m.mul.energy_pj > 2.0 * m.add.energy_pj, "{}", m.name);
+            assert!(m.mul.area_um2 > m.add.area_um2, "{}", m.name);
+            assert_eq!(m.sub, m.add, "{}: sub must cost the same as add", m.name);
+        }
+    }
+
+    #[test]
+    fn energy_linear() {
+        let m = CostModel::ieee754_f32();
+        assert!((m.energy_pj(1, 0, 0) - 0.9).abs() < 1e-12);
+        assert!((m.energy_pj(0, 1, 0) - 0.9).abs() < 1e-12);
+        assert!((m.energy_pj(0, 0, 1) - 3.7).abs() < 1e-12);
+        assert!((m.energy_pj(2, 3, 4) - (2.0 * 0.9 + 3.0 * 0.9 + 4.0 * 3.7)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrated_ratios() {
+        let m = CostModel::paper_calibrated();
+        let rho_e = m.mul.energy_pj / m.add.energy_pj;
+        let rho_a = m.mul.area_um2 / m.add.area_um2;
+        // pair fraction at rounding 0.05 in the paper's Table 1
+        let f = 163_447.0 / 405_600.0;
+        let power_saving = f * rho_e / (1.0 + rho_e);
+        let area_saving = f * rho_a / (1.0 + rho_a);
+        assert!((power_saving - 0.3203).abs() < 0.002, "{power_saving}");
+        assert!((area_saving - 0.2459).abs() < 0.002, "{area_saving}");
+    }
+}

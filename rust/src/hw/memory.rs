@@ -1,0 +1,237 @@
+//! Memory-hierarchy energy accounting — a system-level extension the
+//! paper omits (its −32 % power is *datapath-only*).
+//!
+//! Accelerator energy is often dominated by data movement: with the
+//! published per-access energies (Horowitz ISSCC'14, 45 nm: 8 KB SRAM
+//! ≈ 10 pJ/32-bit word, DRAM ≈ 1.3–2.6 nJ/word), an honest system-level
+//! savings number must include weight/activation traffic. The subtractor
+//! method does not reduce *input* traffic (every `I` is still read), but
+//! it does shrink weight storage (one `k` per pair instead of two full
+//! weights) and therefore weight-buffer reads.
+//!
+//! [`MemoryModel::traffic`] derives per-inference traffic from a layer
+//! pairing under a weight-stationary dataflow and prices it; combined
+//! with the datapath cost this yields the *system-level* savings curve
+//! (`benches/system_energy.rs`).
+
+use super::costmodel::CostModel;
+use crate::accel::LayerPairing;
+
+/// Per-access energies, picojoules per 32-bit word.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// On-chip SRAM (weight/activation buffers).
+    pub sram_pj: f64,
+    /// Off-chip DRAM.
+    pub dram_pj: f64,
+    /// Register-file / forwarding access (per operand reaching a lane).
+    pub reg_pj: f64,
+}
+
+impl MemoryModel {
+    /// Published 45 nm numbers (same source as the datapath constants).
+    pub fn horowitz_45nm() -> Self {
+        Self { sram_pj: 10.0, dram_pj: 1300.0, reg_pj: 1.0 }
+    }
+}
+
+/// Traffic for one conv layer, in 32-bit-word accesses per inference.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Traffic {
+    /// DRAM words: weights streamed once (weight-stationary) + ifmap once
+    /// + ofmap once.
+    pub dram_words: u64,
+    /// SRAM words: weight-buffer reads + ifmap patch reads + ofmap writes.
+    pub sram_words: u64,
+    /// Register/operand events at the lanes.
+    pub reg_words: u64,
+}
+
+impl Traffic {
+    pub fn energy_pj(&self, m: &MemoryModel) -> f64 {
+        self.dram_words as f64 * m.dram_pj
+            + self.sram_words as f64 * m.sram_pj
+            + self.reg_words as f64 * m.reg_pj
+    }
+
+    pub fn add(&mut self, o: Traffic) {
+        self.dram_words += o.dram_words;
+        self.sram_words += o.sram_words;
+        self.reg_words += o.reg_words;
+    }
+}
+
+/// Geometry the traffic model needs for one conv layer.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerGeometry {
+    /// Input feature-map words (C·H·W).
+    pub ifmap_words: u64,
+    /// Output feature-map words (Cout·OH·OW).
+    pub ofmap_words: u64,
+    /// Output positions (OH·OW).
+    pub out_positions: u64,
+}
+
+/// Weight-stationary traffic for a paired layer.
+///
+/// Storage follows the paper's spliced layout (Fig 6): combined weights
+/// sit at the top of the list as `k` + one packed index word (two 13-bit
+/// patch indices fit LeNet's K ≤ 400), uncombined weights stay at the
+/// bottom *positionally* (their patch order is preserved, so they need
+/// no index metadata — they run through the ordinary MAC schedule).
+/// Dense baseline stores K words per filter, positionally.
+/// Per output position every stored weight word is read once from the
+/// weight buffer; every pair gathers two input operands, every MAC one.
+pub fn traffic(pairing: &LayerPairing, geo: LayerGeometry, dense: bool) -> Traffic {
+    traffic_opt(pairing, geo, dense, false)
+}
+
+/// [`traffic`] with a residency knob: `weights_resident = true` models
+/// weights pinned in on-chip SRAM (LeNet-5's 61 k parameters fit easily),
+/// so DRAM carries only feature maps.
+pub fn traffic_opt(
+    pairing: &LayerPairing,
+    geo: LayerGeometry,
+    dense: bool,
+    weights_resident: bool,
+) -> Traffic {
+    let pairs: u64 = pairing.filters.iter().map(|f| f.n_pairs() as u64).sum();
+    let unpaired: u64 = pairing.filters.iter().map(|f| f.n_unpaired() as u64).sum();
+    let total_weights = 2 * pairs + unpaired;
+
+    let weight_words = if dense {
+        total_weights // positional dense storage
+    } else {
+        // pair: k + packed index word; uncombined: positional value only
+        2 * pairs + unpaired
+    };
+    let weight_reads_per_pos = weight_words;
+    // operands reaching lanes per position: pair = 2 inputs + 1 k;
+    // MAC = 1 input + 1 w; dense pair-equivalent = 2 MACs = 4 operands
+    let reg_per_pos = if dense { 2 * total_weights } else { 3 * pairs + 2 * unpaired };
+
+    Traffic {
+        dram_words: if weights_resident { 0 } else { weight_words }
+            + geo.ifmap_words
+            + geo.ofmap_words,
+        sram_words: weight_reads_per_pos * geo.out_positions
+            + geo.ifmap_words // each ifmap word buffered once
+            + geo.ofmap_words,
+        reg_words: reg_per_pos * geo.out_positions,
+    }
+}
+
+/// System-level energy: datapath + memory for one layer.
+pub fn system_energy_pj(
+    cost: &CostModel,
+    mem: &MemoryModel,
+    pairing: &LayerPairing,
+    geo: LayerGeometry,
+    dense: bool,
+) -> f64 {
+    system_energy_opt(cost, mem, pairing, geo, dense, false)
+}
+
+/// [`system_energy_pj`] with the weight-residency knob.
+pub fn system_energy_opt(
+    cost: &CostModel,
+    mem: &MemoryModel,
+    pairing: &LayerPairing,
+    geo: LayerGeometry,
+    dense: bool,
+    weights_resident: bool,
+) -> f64 {
+    let pairs: u64 = pairing.filters.iter().map(|f| f.n_pairs() as u64).sum();
+    let unpaired: u64 = pairing.filters.iter().map(|f| f.n_unpaired() as u64).sum();
+    let total = 2 * pairs + unpaired;
+    let datapath = if dense {
+        cost.energy_pj(total * geo.out_positions, 0, total * geo.out_positions)
+    } else {
+        let macs = (pairs + unpaired) * geo.out_positions;
+        cost.energy_pj(macs, pairs * geo.out_positions, macs)
+    };
+    datapath + traffic_opt(pairing, geo, dense, weights_resident).energy_pj(mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn pairing(rounding: f32) -> LayerPairing {
+        // 4 weights: one exact pair + two loners
+        let w = Tensor::new(&[1, 4], vec![0.5, -0.5, 0.9, 0.2]);
+        LayerPairing::from_weights(&w, rounding)
+    }
+
+    const GEO: LayerGeometry =
+        LayerGeometry { ifmap_words: 100, ofmap_words: 50, out_positions: 10 };
+
+    #[test]
+    fn unpaired_weights_are_positional() {
+        // 1 pair + 2 loners: dense 4 words; paired 2 (k + index) + 2 = 4 —
+        // the index word exactly offsets the merged pair value.
+        let p = pairing(0.01);
+        assert_eq!(p.total_pairs(), 1);
+        let dense = traffic(&p, GEO, true);
+        let paired = traffic(&p, GEO, false);
+        assert_eq!(paired.dram_words, dense.dram_words);
+        // register/operand traffic shrinks: pair = 3 operands vs 4
+        assert!(paired.reg_words < dense.reg_words);
+    }
+
+    #[test]
+    fn full_pairing_keeps_storage_parity_and_cuts_operands() {
+        let w = Tensor::new(&[1, 6], vec![0.5, -0.5, 0.3, -0.3, 0.7, -0.7]);
+        let p = LayerPairing::from_weights(&w, 0.01);
+        assert_eq!(p.total_pairs(), 3);
+        let dense = traffic(&p, GEO, true);
+        let paired = traffic(&p, GEO, false);
+        // dense 6 words vs paired 3·2 = 6 words — parity at 100 % pairing
+        assert_eq!(paired.dram_words, dense.dram_words);
+        // register traffic shrinks: 3 pairs × 3 operands < 6 MACs × 2
+        assert!(paired.reg_words < dense.reg_words);
+    }
+
+    #[test]
+    fn energy_is_positive_and_memory_dominates_for_small_compute() {
+        let cost = CostModel::ieee754_f32();
+        let mem = MemoryModel::horowitz_45nm();
+        let p = pairing(0.01);
+        let e = system_energy_pj(&cost, &mem, &p, GEO, true);
+        assert!(e > 0.0);
+        let t = traffic(&p, GEO, true);
+        assert!(t.energy_pj(&mem) > 0.5 * e, "DRAM should dominate tiny layers");
+    }
+
+    #[test]
+    fn system_savings_smaller_than_datapath_savings() {
+        // the paper's headline is datapath-only; with memory included the
+        // relative saving must shrink (memory traffic barely changes)
+        let cost = CostModel::ieee754_f32();
+        let mem = MemoryModel::horowitz_45nm();
+        let w = Tensor::new(
+            &[1, 100],
+            (0..100).map(|i| if i % 2 == 0 { 0.1 + i as f32 * 1e-3 } else { -(0.1 + (i - 1) as f32 * 1e-3) }).collect(),
+        );
+        let p = LayerPairing::from_weights(&w, 0.01);
+        assert!(p.total_pairs() >= 45);
+        let geo = LayerGeometry { ifmap_words: 1000, ofmap_words: 500, out_positions: 500 };
+        let dense_dp = {
+            let total = 100 * geo.out_positions;
+            cost.energy_pj(total, 0, total)
+        };
+        let paired_dp = {
+            let pairs: u64 = p.total_pairs() as u64;
+            let unp = 100 - 2 * pairs;
+            let macs = (pairs + unp) * geo.out_positions;
+            cost.energy_pj(macs, pairs * geo.out_positions, macs)
+        };
+        let dp_saving = 1.0 - paired_dp / dense_dp;
+        let sys_dense = system_energy_pj(&cost, &mem, &p, geo, true);
+        let sys_paired = system_energy_pj(&cost, &mem, &p, geo, false);
+        let sys_saving = 1.0 - sys_paired / sys_dense;
+        assert!(sys_saving < dp_saving, "system {sys_saving} !< datapath {dp_saving}");
+        assert!(sys_saving > 0.0, "still a net win at high pair fraction");
+    }
+}

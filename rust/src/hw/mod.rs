@@ -1,0 +1,27 @@
+//! Hardware cost modelling — the substitute for the paper's Synopsys
+//! Design Compiler + TSMC 65 nm flow (DESIGN.md §3).
+//!
+//! * [`costmodel`] — per-operation energy / area / delay constants for
+//!   IEEE-754 f32 add / sub / mul units, with the ratios that drive the
+//!   paper's savings documented and sourced.
+//! * [`synthesis`] — "virtual synthesis": composes op mixes into
+//!   accelerator power / area and computes savings vs the dense baseline
+//!   (reproduces Fig 8's left axis).
+//! * [`pe`] — cycle-level simulator of the modified convolution unit
+//!   (paper Fig 5): subtractor lanes + MAC lanes over the pairing
+//!   schedule, reporting cycles and lane utilization.
+
+mod costmodel;
+mod memory;
+mod pe;
+mod quant;
+mod synthesis;
+
+pub use costmodel::{CostModel, OpCost};
+pub use memory::{
+    system_energy_opt, system_energy_pj, traffic, traffic_opt, LayerGeometry, MemoryModel,
+    Traffic,
+};
+pub use quant::{dequantize, quantize_tensor, QuantParams, QuantSubConv2d, QuantizedTensor};
+pub use pe::{PeArrayConfig, PeArraySim, PeReport};
+pub use synthesis::{savings as savings_report, synthesize, SavingsReport, SynthesisResult};

@@ -1,0 +1,250 @@
+//! Int8 quantized datapath — extension beyond the paper's IEEE-754 units.
+//!
+//! Edge accelerators overwhelmingly run int8; the natural question is
+//! whether the subtractor substitution still pays. It pays *more*: the
+//! published int8 cost ratios (mul/add ≈ 6.7× energy, ≈ 7.8× area vs
+//! ≈ 4.1× / 1.84× for f32) make each converted multiply worth more. The
+//! subtractor identity survives quantization exactly: symmetric int8
+//! quantization maps the snapped pair (k, −k) to (q, −q), so
+//! `q·(I1 − I2)` remains bit-exact vs the quantized dense conv.
+//!
+//! This module provides symmetric per-tensor int8 quantization, a
+//! quantized paired-conv unit ([`QuantSubConv2d`]), and the int8 cost
+//! model. `benches/system_energy.rs` reports the int8 savings curve.
+
+use super::costmodel::{CostModel, OpCost};
+use crate::accel::LayerPairing;
+use crate::nn::OpCounts;
+use crate::tensor::{im2col, Tensor};
+
+/// Symmetric per-tensor quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Real value = scale × int8 value.
+    pub scale: f32,
+}
+
+impl QuantParams {
+    /// Fit the scale so `max |v|` maps to ±127.
+    pub fn fit(values: &[f32]) -> Self {
+        let max = values.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        Self { scale: if max > 0.0 { max / 127.0 } else { 1.0 } }
+    }
+
+    #[inline]
+    pub fn quantize(&self, v: f32) -> i8 {
+        (v / self.scale).round().clamp(-127.0, 127.0) as i8
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f32 {
+        q as f32 * self.scale
+    }
+}
+
+/// An int8 tensor with its quantization params.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub params: QuantParams,
+}
+
+/// Quantize an f32 tensor symmetrically.
+pub fn quantize_tensor(t: &Tensor) -> QuantizedTensor {
+    let params = QuantParams::fit(t.data());
+    QuantizedTensor {
+        shape: t.shape().to_vec(),
+        data: t.data().iter().map(|&v| params.quantize(v)).collect(),
+        params,
+    }
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: &QuantizedTensor) -> Tensor {
+    Tensor::new(&q.shape, q.data.iter().map(|&v| q.params.dequantize(v)).collect())
+}
+
+impl CostModel {
+    /// Int8 unit costs (Horowitz ISSCC'14, 45 nm): add 0.03 pJ / 36 µm²,
+    /// mul 0.2 pJ / 282 µm². Ratios 6.7× energy, 7.8× area — the
+    /// subtractor trade gets *better* at int8.
+    pub fn int8() -> Self {
+        let add = OpCost { energy_pj: 0.03, area_um2: 36.0, latency_cycles: 1 };
+        CostModel {
+            name: "int8-45nm(horowitz-isscc14)",
+            frequency_ghz: 1.0,
+            add,
+            sub: add,
+            mul: OpCost { energy_pj: 0.2, area_um2: 282.0, latency_cycles: 1 },
+        }
+    }
+}
+
+/// Quantized paired conv layer: int8 operands, i32 accumulation, f32
+/// bias/dequant at the end (the standard int8 inference recipe).
+#[derive(Debug, Clone)]
+pub struct QuantSubConv2d {
+    pairing: LayerPairing,
+    /// Quantized snapped weights per filter: pairs as q (i2 implied −q),
+    /// uncombined as raw int8.
+    pair_q: Vec<Vec<i8>>,
+    unp_q: Vec<Vec<i8>>,
+    wparams: QuantParams,
+    bias: Tensor,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+}
+
+impl QuantSubConv2d {
+    /// Pair in f32 (Algorithm 1), snap, then quantize the snapped weights.
+    pub fn compile(weight: &Tensor, bias: &Tensor, rounding: f32) -> Self {
+        let pairing = LayerPairing::from_weights(weight, rounding);
+        let modified = pairing.modified_weights(weight);
+        let wparams = QuantParams::fit(modified.data());
+        let cout = weight.shape()[0];
+        let mut pair_q = Vec::with_capacity(cout);
+        let mut unp_q = Vec::with_capacity(cout);
+        for f in &pairing.filters {
+            pair_q.push(f.pair_k.iter().map(|&k| wparams.quantize(k)).collect());
+            unp_q.push(f.unp_w.iter().map(|&w| wparams.quantize(w)).collect());
+        }
+        Self {
+            pairing,
+            pair_q,
+            unp_q,
+            wparams,
+            bias: bias.clone(),
+            kh: weight.shape()[2],
+            kw: weight.shape()[3],
+            cout,
+        }
+    }
+
+    pub fn total_pairs(&self) -> usize {
+        self.pairing.total_pairs()
+    }
+
+    /// f32 in → quantize activations → int8 paired conv → f32 out.
+    pub fn forward(&self, x: &Tensor) -> (Tensor, OpCounts) {
+        let ic = im2col(x, self.kh, self.kw);
+        let rows = ic.patches.shape()[0];
+        let k = ic.k;
+        let xparams = QuantParams::fit(ic.patches.data());
+        let xq: Vec<i8> = ic.patches.data().iter().map(|&v| xparams.quantize(v)).collect();
+        let out_scale = xparams.scale * self.wparams.scale;
+
+        let mut out = vec![0f32; rows * self.cout];
+        for r in 0..rows {
+            let patch = &xq[r * k..(r + 1) * k];
+            for (c, f) in self.pairing.filters.iter().enumerate() {
+                let mut acc: i32 = 0;
+                // subtractor lane in the int8 domain: q·(I1 − I2)
+                for (j, &q) in self.pair_q[c].iter().enumerate() {
+                    let d = patch[f.pair_i1[j] as usize] as i32
+                        - patch[f.pair_i2[j] as usize] as i32;
+                    acc += q as i32 * d;
+                }
+                for (j, &q) in self.unp_q[c].iter().enumerate() {
+                    acc += q as i32 * patch[f.unp_idx[j] as usize] as i32;
+                }
+                out[r * self.cout + c] = acc as f32 * out_scale + self.bias.data()[c];
+            }
+        }
+
+        let (b, oh, ow) = (ic.batch, ic.out_h, ic.out_w);
+        let mut nchw = vec![0f32; out.len()];
+        for bi in 0..b {
+            for y in 0..oh {
+                for xw in 0..ow {
+                    let r = (bi * oh + y) * ow + xw;
+                    for c in 0..self.cout {
+                        nchw[((bi * self.cout + c) * oh + y) * ow + xw] =
+                            out[r * self.cout + c];
+                    }
+                }
+            }
+        }
+        let pairs = self.pairing.total_pairs() as u64;
+        let unpaired: u64 = self.pairing.filters.iter().map(|f| f.n_unpaired() as u64).sum();
+        let counts = OpCounts::paired_layer(pairs, unpaired, (b * oh * ow) as u64, 0);
+        (Tensor::new(&[b, self.cout, oh, ow], nchw), counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn quant_roundtrip_error_bounded() {
+        let mut rng = Rng::seed_from_u64(1);
+        let t = Tensor::new(&[100], rng.vec_range(100, -2.0, 2.0));
+        let q = quantize_tensor(&t);
+        let back = dequantize(&q);
+        // symmetric int8: error ≤ scale/2
+        assert!(t.max_abs_diff(&back) <= q.params.scale / 2.0 + 1e-7);
+    }
+
+    #[test]
+    fn snapped_pairs_stay_exact_opposites_in_int8() {
+        let p = QuantParams::fit(&[0.73, -0.73, 0.2]);
+        assert_eq!(p.quantize(0.73), -p.quantize(-0.73));
+    }
+
+    #[test]
+    fn zero_tensor_quantizes_safely() {
+        let q = quantize_tensor(&Tensor::zeros(&[5]));
+        assert!(q.data.iter().all(|&v| v == 0));
+        assert_eq!(q.params.scale, 1.0);
+    }
+
+    #[test]
+    fn quantized_paired_close_to_f32_dense() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x = Tensor::new(&[1, 3, 8, 8], rng.vec_range(3 * 64, -1.0, 1.0));
+        let w = Tensor::new(&[4, 3, 3, 3], rng.vec_range(4 * 27, -0.5, 0.5));
+        let b = Tensor::new(&[4], rng.vec_range(4, -0.1, 0.1));
+        let unit = QuantSubConv2d::compile(&w, &b, 0.05);
+        let (got, counts) = unit.forward(&x);
+        let wmod = LayerPairing::from_weights(&w, 0.05).modified_weights(&w);
+        let (want, _) = crate::nn::layers::conv2d(&x, &wmod, &b, 1, 0);
+        // int8 error bound: K·(qx·qw cross terms) — loose practical bound
+        assert!(
+            got.max_abs_diff(&want) < 0.2,
+            "int8 drifted too far: {}",
+            got.max_abs_diff(&want)
+        );
+        assert!(counts.subs > 0);
+    }
+
+    #[test]
+    fn int8_model_ratios() {
+        let m = CostModel::int8();
+        assert!(m.mul.energy_pj / m.add.energy_pj > 6.0);
+        assert!(m.mul.area_um2 / m.add.area_um2 > 7.0);
+        assert_eq!(m.sub, m.add);
+    }
+
+    #[test]
+    fn int8_savings_exceed_f32_savings() {
+        // same pair fraction, higher mul/add ratio → larger saving
+        use crate::hw::savings_report;
+        let row = |r: f32, subs: u64| crate::accel::ModelOps {
+            rounding: r,
+            adds: 405_600 - subs,
+            subs,
+            muls: 405_600 - subs,
+            total: 811_200 - subs,
+            layers: vec![],
+        };
+        let base = row(0.0, 0);
+        let point = row(0.05, 163_447);
+        let f32_s = savings_report(&CostModel::ieee754_f32(), &base, &point);
+        let i8_s = savings_report(&CostModel::int8(), &base, &point);
+        assert!(i8_s.power_saving_pct > f32_s.power_saving_pct);
+        assert!(i8_s.area_saving_pct > f32_s.area_saving_pct);
+    }
+}

@@ -1,0 +1,36 @@
+//! # subaccel — Subtractor-Based CNN Inference Accelerator
+//!
+//! Production-quality reproduction of *"Subtractor-Based CNN Inference
+//! Accelerator"* (Gao, Hammad, El-Sankary, Gu — CS.AR 2023) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator, the paper's weight
+//!   preprocessor (Algorithm 1), the modified convolution unit, the
+//!   hardware cost model that substitutes for Synopsys DC + TSMC 65 nm,
+//!   and a pure-rust CNN engine used as a second numerical oracle.
+//! * **L2/L1 (python/, build-time only)** — LeNet-5 in JAX calling Pallas
+//!   kernels, AOT-lowered to HLO text in `artifacts/` and executed here
+//!   through the PJRT CPU client ([`runtime`]). Python never runs on the
+//!   request path.
+//!
+//! Module map (see DESIGN.md for the experiment index):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | minimal f32 NCHW tensor substrate |
+//! | [`nn`] | pure-rust CNN inference engine + LeNet-5/AlexNet defs |
+//! | [`data`] | tensor container I/O + datasets (wire contract with python) |
+//! | [`accel`] | **the paper**: Algorithm 1, subtractor conv unit, op counts |
+//! | [`hw`] | 65 nm IEEE-754 cost model, virtual synthesis, PE simulator |
+//! | [`runtime`] | PJRT: load `artifacts/*.hlo.txt`, compile, execute |
+//! | [`coordinator`] | async request router + dynamic batcher + metrics |
+
+pub mod accel;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod metrics;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,471 @@
+//! `subaccel` — CLI for the Subtractor-Based CNN Inference Accelerator.
+//!
+//! Subcommands map onto the paper's experiments (DESIGN.md §5):
+//!
+//! * `sweep --table1` — regenerate Table 1 / Fig 7 (op counts per rounding)
+//! * `sweep --fig8`   — regenerate Fig 8 (accuracy vs power/area savings)
+//! * `report`         — Fig 3 / Fig 4 weight distributions + pair stats
+//! * `profile`        — Fig 1 AlexNet per-layer time share
+//! * `infer`          — classify test images through any engine
+//! * `serve`          — run the serving coordinator demo
+//!
+//! Argument parsing is hand-rolled (`Args`): the offline vendor set has
+//! no clap.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use subaccel::accel::{
+    histogram, model_op_sweep, LayerPairing, SubConv2d, WeightStats, TABLE1_ROUNDINGS,
+};
+use subaccel::coordinator::{Coordinator, ServeConfig};
+use subaccel::data::{load_dataset, load_weights, Dataset};
+use subaccel::hw::{savings_report, CostModel};
+use subaccel::nn::{alexnet, lenet5_from_params, Model};
+use subaccel::runtime::Variant;
+use subaccel::tensor::Tensor;
+
+const USAGE: &str = "\
+subaccel — subtractor-based CNN inference accelerator (Gao et al., 2023)
+
+USAGE: subaccel [--artifacts DIR] <command> [options]
+
+COMMANDS
+  sweep    [--table1] [--fig8] [--limit N]     Table 1 / Fig 7 / Fig 8
+  report   [--layer c1|c3|c5] [--bins N]       Fig 3 / Fig 4 weight report
+  profile  [--reps N]                          Fig 1 AlexNet layer profile
+  infer    [--count N] [--engine rust|subconv|pallas|xla|paired] [--rounding R]
+           (paired = the fully-paired AOT artifact: every conv layer runs
+            the subtractor datapath inside the PJRT executable)
+  serve    [--requests N] [--batch 1|8|32] [--rounding R] [--clients N]
+           [--engine pallas|xla] [--workers N]
+  synth    [--rounding R] [--mac-lanes N] [--sub-lanes N]
+           virtual synthesis: absolute power/area/cycles per design point
+";
+
+/// Tiny flag parser: `--key value` pairs after a positional command.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut cmd = String::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flags: next token missing or is another flag
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                if !cmd.is_empty() {
+                    bail!("unexpected positional argument {a}");
+                }
+                cmd = a.clone();
+                i += 1;
+            }
+        }
+        Ok(Self { cmd, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: {v}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv)?;
+    let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
+    match args.cmd.as_str() {
+        "sweep" => sweep(&artifacts, &args),
+        "report" => report(&artifacts, &args),
+        "profile" => profile(&args),
+        "infer" => infer(&artifacts, &args),
+        "serve" => serve(&artifacts, &args),
+        "synth" => synth(&artifacts, &args),
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn load_model(artifacts: &PathBuf) -> Result<Model> {
+    let weights = load_weights(artifacts.join("weights.bin"))
+        .context("load trained weights (run `make artifacts`)")?;
+    Ok(lenet5_from_params(&weights))
+}
+
+fn sweep(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let table1 = args.has("table1");
+    let fig8 = args.has("fig8");
+    let limit: usize = args.get("limit", 500)?;
+    let model = load_model(artifacts)?;
+    let rows = model_op_sweep(&model, &[1, 1, 32, 32], &TABLE1_ROUNDINGS);
+
+    if table1 || !fig8 {
+        println!("# Table 1 — operations per inference (LeNet-5 conv layers)");
+        println!(
+            "{:>9} {:>10} {:>13} {:>16} {:>9}",
+            "rounding", "additions", "subtractions", "multiplications", "total"
+        );
+        for r in &rows {
+            println!(
+                "{:>9} {:>10} {:>13} {:>16} {:>9}",
+                r.rounding, r.adds, r.subs, r.muls, r.total
+            );
+        }
+    }
+
+    if fig8 {
+        let ds = load_dataset(artifacts.join("dataset.bin"))?;
+        let n = limit.min(ds.n);
+        let cost = CostModel::ieee754_f32();
+        let baseline = &rows[0];
+        println!(
+            "\n# Fig 8 — accuracy vs power/area savings ({n} images, cost model {})",
+            cost.name
+        );
+        println!(
+            "{:>9} {:>10} {:>10} {:>9} {:>10} {:>10}",
+            "rounding", "power_sav%", "area_sav%", "ops_sav%", "accuracy%", "pairs"
+        );
+        for row in &rows {
+            let s = savings_report(&cost, baseline, row);
+            let acc = eval_accuracy(&model, &ds, n, row.rounding);
+            let pairs: u64 = row.layers.iter().map(|(_, p, _)| p).sum();
+            println!(
+                "{:>9} {:>10.2} {:>10.2} {:>9.2} {:>10.2} {:>10}",
+                row.rounding,
+                s.power_saving_pct,
+                s.area_saving_pct,
+                s.ops_saving_pct,
+                acc * 100.0,
+                pairs
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Accuracy of the rounding variant on the first `n` test images (dense
+/// engine with modified weights — numerically identical to the paired
+/// datapath, see accel::subconv tests).
+fn eval_accuracy(model: &Model, ds: &Dataset, n: usize, rounding: f32) -> f64 {
+    let mut m = model.clone();
+    if rounding > 0.0 {
+        for info in model.conv_layers(&[1, 1, 32, 32]) {
+            let pairing = LayerPairing::from_weights(&info.weight, rounding);
+            m.set_conv_weights(&info.name, pairing.modified_weights(&info.weight));
+        }
+    }
+    let mut hits = 0usize;
+    for i in 0..n {
+        let logits = m.infer(&ds.image32(i));
+        if logits.argmax_rows()[0] == ds.labels[i] as usize {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+fn report(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let layer = args.str("layer", "c3");
+    let bins: usize = args.get("bins", 41)?;
+    let model = load_model(artifacts)?;
+    let infos = model.conv_layers(&[1, 1, 32, 32]);
+    let info = infos
+        .iter()
+        .find(|i| i.name == layer)
+        .with_context(|| format!("unknown conv layer {layer} (have: c1, c3, c5)"))?;
+    let w = info.weight.data();
+    let stats = WeightStats::compute(w);
+    println!("# Fig 3/4 — weight distribution, layer {layer} ({:?})", info.weight.shape());
+    println!("{stats:#?}");
+    let lim = stats.min.abs().max(stats.max.abs());
+    println!("\nhistogram:");
+    print!("{}", histogram(w, -lim, lim, bins).render(60));
+    for r in [0.01f32, 0.05, 0.1] {
+        let p = LayerPairing::from_weights(&info.weight, r);
+        println!(
+            "rounding {:>5}: {} pairs / {} weights ({:.1}% combined), max snap err {:.5}",
+            r,
+            p.total_pairs(),
+            info.weight.len(),
+            200.0 * p.total_pairs() as f32 / info.weight.len() as f32,
+            p.max_snap_error(&info.weight)
+        );
+    }
+    // CSV dumps for external plotting: Fig 3 = raw values, Fig 4 = histogram
+    std::fs::create_dir_all(artifacts.join("results"))?;
+    let mut fig3 = String::from("index,weight\n");
+    for (i, v) in w.iter().enumerate() {
+        fig3.push_str(&format!("{i},{v}\n"));
+    }
+    std::fs::write(artifacts.join("results").join(format!("fig3_{layer}_weights.csv")), fig3)?;
+    let h = histogram(w, -lim, lim, bins);
+    let mut fig4 = String::from("bin_lo,bin_hi,count\n");
+    for (i, &c) in h.counts.iter().enumerate() {
+        let lo = h.lo + h.bin_width() * i as f32;
+        fig4.push_str(&format!("{lo},{},{c}\n", lo + h.bin_width()));
+    }
+    std::fs::write(artifacts.join("results").join(format!("fig4_{layer}_hist.csv")), fig4)?;
+    println!("\nwrote artifacts/results/fig3_{layer}_weights.csv and fig4_{layer}_hist.csv");
+    Ok(())
+}
+
+fn profile(args: &Args) -> Result<()> {
+    let reps: usize = args.get("reps", 3)?;
+    let m = alexnet();
+    let x = Tensor::zeros(&[1, 3, 227, 227]);
+    println!("# Fig 1 — AlexNet inference time share per layer ({reps} reps, pure-rust engine)");
+    let mut acc: Vec<(String, f64, u64)> = Vec::new();
+    for _ in 0..reps {
+        for (i, (name, secs, counts)) in m.profile(&x).into_iter().enumerate() {
+            if acc.len() <= i {
+                acc.push((name, 0.0, counts.muls));
+            }
+            acc[i].1 += secs;
+        }
+    }
+    let total: f64 = acc.iter().map(|(_, t, _)| t).sum();
+    println!("{:>8} {:>10} {:>8} {:>14}", "layer", "time_ms", "time_%", "macs");
+    for (name, t, macs) in &acc {
+        println!(
+            "{:>8} {:>10.2} {:>8.2} {:>14}",
+            name,
+            t * 1e3 / reps as f64,
+            100.0 * t / total,
+            macs
+        );
+    }
+    let conv: f64 = acc
+        .iter()
+        .filter(|(n, ..)| n.starts_with("conv"))
+        .map(|(_, t, _)| *t)
+        .sum();
+    println!("\nconv layers: {:.1}% of inference time (paper Fig 1: ~90%)", 100.0 * conv / total);
+    Ok(())
+}
+
+fn infer(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let count: usize = args.get("count", 8)?;
+    let engine = args.str("engine", "rust");
+    let rounding: f32 = args.get("rounding", 0.0)?;
+    let weights = load_weights(artifacts.join("weights.bin"))?;
+    let ds = load_dataset(artifacts.join("dataset.bin"))?;
+    let n = count.min(ds.n);
+    let mut hits = 0usize;
+    match engine.as_str() {
+        "rust" => {
+            let model = lenet5_from_params(&weights);
+            let mut m = model.clone();
+            if rounding > 0.0 {
+                for info in model.conv_layers(&[1, 1, 32, 32]) {
+                    let p = LayerPairing::from_weights(&info.weight, rounding);
+                    m.set_conv_weights(&info.name, p.modified_weights(&info.weight));
+                }
+            }
+            for i in 0..n {
+                hits += (m.infer(&ds.image32(i)).argmax_rows()[0] == ds.labels[i] as usize) as usize;
+            }
+        }
+        "subconv" => {
+            // the actual paired subtractor datapath for conv layers
+            let model = lenet5_from_params(&weights);
+            let infos = model.conv_layers(&[1, 1, 32, 32]);
+            let units: Vec<SubConv2d> = infos
+                .iter()
+                .map(|i| SubConv2d::compile(&i.weight, &i.bias, rounding))
+                .collect();
+            for i in 0..n {
+                let pred = subconv_forward(&weights, &units, &ds.image32(i));
+                hits += (pred == ds.labels[i] as usize) as usize;
+            }
+        }
+        "pallas" | "xla" => {
+            let variant = if engine == "pallas" { Variant::Pallas } else { Variant::XlaNative };
+            let rt = subaccel::runtime::Runtime::cpu()?;
+            let mut exe =
+                subaccel::runtime::LeNet5Executor::load(&rt, artifacts, variant, 1, &weights)?;
+            if rounding > 0.0 {
+                exe.install_variant(&weights, rounding)?;
+            }
+            for i in 0..n {
+                let logits = exe.execute(&ds.image32(i))?;
+                hits += (logits.argmax_rows()[0] == ds.labels[i] as usize) as usize;
+            }
+        }
+        "paired" => {
+            let rt = subaccel::runtime::Runtime::cpu()?;
+            let exe = subaccel::runtime::PairedLeNet5Executor::load(
+                &rt, artifacts, 1, &weights, rounding,
+            )?;
+            println!("pairs per conv layer: {:?}", exe.pairs_per_layer());
+            for i in 0..n {
+                let logits = exe.execute(&ds.image32(i))?;
+                hits += (logits.argmax_rows()[0] == ds.labels[i] as usize) as usize;
+            }
+        }
+        other => bail!("unknown engine {other} (rust|subconv|pallas|xla|paired)"),
+    }
+    println!("{hits}/{n} correct ({:.2}%) at rounding {rounding} [{engine}]", 100.0 * hits as f64 / n as f64);
+    Ok(())
+}
+
+/// LeNet-5 forward with conv layers on the paired subtractor unit.
+fn subconv_forward(weights: &HashMap<String, Tensor>, units: &[SubConv2d], x: &Tensor) -> usize {
+    use subaccel::nn::layers::{avgpool2, dense_layer, tanh_inplace};
+    let mut h = x.clone();
+    for (i, unit) in units.iter().enumerate() {
+        let (mut out, _) = unit.forward(&h);
+        tanh_inplace(&mut out);
+        h = out;
+        if i < 2 {
+            h = avgpool2(&h);
+        }
+    }
+    let b = h.shape()[0];
+    h = h.reshape(&[b, 120]);
+    let mut f6 = dense_layer(&h, &weights["f6_w"], &weights["f6_b"]);
+    tanh_inplace(&mut f6);
+    dense_layer(&f6, &weights["out_w"], &weights["out_b"]).argmax_rows()[0]
+}
+
+/// Virtual synthesis: absolute design-point numbers (the paper reports
+/// percentages only; these make the cost model inspectable).
+fn synth(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    use subaccel::hw::{synthesize, PeArrayConfig, PeArraySim};
+    let rounding: f32 = args.get("rounding", 0.05)?;
+    let mac_lanes: usize = args.get("mac-lanes", 16)?;
+    let sub_lanes: usize = args.get("sub-lanes", 8)?;
+    let model = load_model(artifacts)?;
+    let cost = CostModel::ieee754_f32();
+    println!("# virtual synthesis ({}, 1 inference, conv layers)", cost.name);
+    println!(
+        "{:>9} {:>12} {:>10} {:>10} {:>12}",
+        "rounding", "energy_nJ", "power_mW", "area_mm2", "cycles(64sl)"
+    );
+    for r in [0.0f32, rounding] {
+        let ops = subaccel::accel::model_ops(&model, &[1, 1, 32, 32], r);
+        let s = synthesize(&cost, &ops);
+        println!(
+            "{:>9} {:>12.2} {:>10.2} {:>10.4} {:>12}",
+            r, s.energy_nj, s.power_mw, s.area_mm2, s.cycles
+        );
+    }
+    let sim = PeArraySim::new(PeArrayConfig {
+        mac_lanes,
+        sub_lanes,
+        frequency_ghz: cost.frequency_ghz,
+    });
+    println!("\n# PE-array schedule ({mac_lanes} MAC + {sub_lanes} sub lanes)");
+    println!("{:>9} {:>12} {:>12} {:>9} {:>9}", "rounding", "cycles", "latency_us", "mac_util", "sub_util");
+    for r in [0.0f32, rounding] {
+        let infos = model.conv_layers(&[1, 1, 32, 32]);
+        let pairings: Vec<(LayerPairing, usize)> = infos
+            .iter()
+            .map(|i| (LayerPairing::from_weights(&i.weight, r), i.out_positions))
+            .collect();
+        let refs: Vec<(&LayerPairing, usize)> = pairings.iter().map(|(p, n)| (p, *n)).collect();
+        let rep = sim.simulate_model(&refs);
+        println!(
+            "{:>9} {:>12} {:>12.1} {:>9.3} {:>9.3}",
+            r, rep.cycles, rep.latency_us, rep.mac_utilization, rep.sub_utilization
+        );
+    }
+    Ok(())
+}
+
+fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let requests: usize = args.get("requests", 256)?;
+    let batch: usize = args.get("batch", 8)?;
+    let rounding: f32 = args.get("rounding", 0.05)?;
+    let clients: usize = args.get("clients", 8)?;
+    let engine = args.str("engine", "xla");
+    if ![1usize, 8, 32].contains(&batch) {
+        bail!("batch must be one of 1/8/32 (compiled artifacts)");
+    }
+    let variant = match engine.as_str() {
+        "pallas" => Variant::Pallas,
+        "xla" => Variant::XlaNative,
+        other => bail!("unknown engine {other} (pallas|xla)"),
+    };
+    let workers: usize = args.get("workers", 1)?;
+    let cfg = ServeConfig {
+        artifacts_dir: artifacts.clone(),
+        batch_size: batch,
+        rounding,
+        variant,
+        workers,
+        ..Default::default()
+    };
+    let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
+    let ds = std::sync::Arc::new(load_dataset(artifacts.join("dataset.bin"))?);
+    let per_client = requests / clients.max(1);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        let ds = ds.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut hits = 0usize;
+            for i in 0..per_client {
+                let idx = (c * per_client + i) % ds.n;
+                loop {
+                    match coord.classify(ds.image32(idx)) {
+                        Ok(logits) => {
+                            let pred = logits
+                                .iter()
+                                .enumerate()
+                                .max_by(|a, b| a.1.total_cmp(b.1))
+                                .map(|(j, _)| j)
+                                .unwrap();
+                            hits += (pred == ds.labels[idx] as usize) as usize;
+                            break;
+                        }
+                        Err(_) => std::thread::sleep(std::time::Duration::from_micros(200)),
+                    }
+                }
+            }
+            hits
+        }));
+    }
+    let hits: usize = handles.into_iter().map(|h| h.join().unwrap_or(0)).sum();
+    let dt = t0.elapsed();
+    let done = clients * per_client;
+    println!(
+        "served {done} requests in {:.2}s → {:.1} req/s [{engine}, batch {batch}]",
+        dt.as_secs_f64(),
+        done as f64 / dt.as_secs_f64()
+    );
+    println!("accuracy {:.2}% at rounding {rounding}", 100.0 * hits as f64 / done as f64);
+    println!("{}", coord.metrics().summary());
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! Serving metrics: latency histograms and throughput counters for the
+//! coordinator. Lock-free on the hot path (atomics); snapshots are cheap
+//! and consistent-enough for reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency histogram from 1 µs to ~17 s.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    // bucket i covers [2^i, 2^(i+1)) microseconds
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const BUCKETS: usize = 25;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile (bucket upper bound), `p` in [0, 100].
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Counters for the serving pipeline.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub queue_latency: LatencyHistogram,
+    pub e2e_latency: LatencyHistogram,
+    pub execute_latency: LatencyHistogram,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} rejected={} batches={} mean_batch={:.2} \
+             e2e_mean={:.0}us e2e_p50={}us e2e_p99={}us exec_mean={:.0}us",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.e2e_latency.mean_us(),
+            self.e2e_latency.percentile_us(50.0),
+            self.e2e_latency.percentile_us(99.0),
+            self.execute_latency.mean_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(1000));
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_us() - 370.0).abs() < 1.0);
+        assert_eq!(h.max_us(), 1000);
+        assert!(h.percentile_us(100.0) >= 1000);
+        assert!(h.percentile_us(1.0) <= 16);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile_us(50.0), 0);
+    }
+
+    #[test]
+    fn zero_duration_clamps() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(1));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_us(), 1);
+    }
+
+    #[test]
+    fn metrics_batch_mean() {
+        let m = ServerMetrics::new();
+        m.batches.store(2, Ordering::Relaxed);
+        m.batched_items.store(9, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 4.5).abs() < 1e-9);
+        assert!(m.summary().contains("mean_batch=4.50"));
+    }
+}

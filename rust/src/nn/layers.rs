@@ -1,0 +1,375 @@
+//! Layer implementations for the pure-rust engine: convolution (stride /
+//! zero-padding), pooling, dense, activations. Each layer's `forward`
+//! returns both the output tensor and its [`OpCounts`].
+
+use super::ops::OpCounts;
+use crate::tensor::Tensor;
+
+/// Non-linearities used by the bundled models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Tanh,
+    Relu,
+}
+
+impl Activation {
+    fn apply(&self, x: &mut Tensor) -> u64 {
+        match self {
+            Activation::None => 0,
+            Activation::Tanh => {
+                for v in x.data_mut() {
+                    *v = v.tanh();
+                }
+                x.len() as u64
+            }
+            Activation::Relu => {
+                for v in x.data_mut() {
+                    *v = v.max(0.0);
+                }
+                x.len() as u64
+            }
+        }
+    }
+}
+
+/// The structural part of a layer (weights live inside the variants).
+#[derive(Debug, Clone)]
+pub enum LayerKind {
+    /// `weight (Cout, Cin, kh, kw)`, `bias (Cout,)`, stride, zero padding.
+    Conv2d { weight: Tensor, bias: Tensor, stride: usize, pad: usize },
+    /// k×k average pooling with stride k.
+    AvgPool { k: usize },
+    /// k×k max pooling with the given stride (AlexNet uses overlapping 3/2).
+    MaxPool { k: usize, stride: usize },
+    /// `weight (Out, In)`, `bias (Out,)`.
+    Dense { weight: Tensor, bias: Tensor },
+    /// NCHW → (N, C·H·W).
+    Flatten,
+}
+
+/// A named layer with an activation applied after the linear part.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub act: Activation,
+}
+
+impl Layer {
+    pub fn new(name: &str, kind: LayerKind, act: Activation) -> Self {
+        Self { name: name.to_string(), kind, act }
+    }
+
+    /// Run the layer; returns output and op counts (activation included).
+    pub fn forward(&self, x: &Tensor) -> (Tensor, OpCounts) {
+        let (mut out, mut counts) = match &self.kind {
+            LayerKind::Conv2d { weight, bias, stride, pad } => {
+                conv2d(x, weight, bias, *stride, *pad)
+            }
+            LayerKind::AvgPool { k } => avgpool(x, *k),
+            LayerKind::MaxPool { k, stride } => maxpool(x, *k, *stride),
+            LayerKind::Dense { weight, bias } => dense(x, weight, bias),
+            LayerKind::Flatten => {
+                let n = x.shape()[0];
+                let rest: usize = x.shape()[1..].iter().product();
+                (x.clone().reshape(&[n, rest]), OpCounts::default())
+            }
+        };
+        counts.activations += self.act.apply(&mut out);
+        (out, counts)
+    }
+}
+
+/// Valid/padded strided convolution, NCHW × OIHW → NCHW.
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    stride: usize,
+    pad: usize,
+) -> (Tensor, OpCounts) {
+    let (bs, cin, h, win) = dims4(x);
+    let (cout, wcin, kh, kw) = dims4(w);
+    assert_eq!(cin, wcin, "channel mismatch {cin} vs {wcin}");
+    assert_eq!(b.len(), cout, "bias length");
+    let (hp, wp) = (h + 2 * pad, win + 2 * pad);
+    assert!(hp >= kh && wp >= kw, "kernel larger than padded input");
+    let oh = (hp - kh) / stride + 1;
+    let ow = (wp - kw) / stride + 1;
+
+    let mut out = vec![0f32; bs * cout * oh * ow];
+    let xd = x.data();
+    let wd = w.data();
+    let bd = b.data();
+
+    if pad == 0 {
+        // Fast path (hot in every sweep): contiguous row dot-products, no
+        // per-tap bounds checks. ~2× over the general path (see
+        // EXPERIMENTS.md §Perf).
+        for bi in 0..bs {
+            for co in 0..cout {
+                let wbase = co * cin * kh * kw;
+                for oy in 0..oh {
+                    let iy0 = oy * stride;
+                    for ox in 0..ow {
+                        let ix0 = ox * stride;
+                        let mut acc = bd[co];
+                        for ci in 0..cin {
+                            let xc = (bi * cin + ci) * h * win;
+                            let wc = wbase + ci * kh * kw;
+                            for dy in 0..kh {
+                                let xrow = &xd[xc + (iy0 + dy) * win + ix0..][..kw];
+                                let wrow = &wd[wc + dy * kw..][..kw];
+                                acc += xrow
+                                    .iter()
+                                    .zip(wrow)
+                                    .map(|(a, b)| a * b)
+                                    .sum::<f32>();
+                            }
+                        }
+                        out[((bi * cout + co) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+    } else {
+        for bi in 0..bs {
+            for co in 0..cout {
+                let wbase = co * cin * kh * kw;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = bd[co];
+                        let iy0 = oy * stride;
+                        let ix0 = ox * stride;
+                        for ci in 0..cin {
+                            let xc = (bi * cin + ci) * h * win;
+                            let wc = wbase + ci * kh * kw;
+                            for dy in 0..kh {
+                                let iy = iy0 + dy;
+                                if iy < pad || iy >= h + pad {
+                                    continue;
+                                }
+                                let xrow = xc + (iy - pad) * win;
+                                let wrow = wc + dy * kw;
+                                for dx in 0..kw {
+                                    let ix = ix0 + dx;
+                                    if ix < pad || ix >= win + pad {
+                                        continue;
+                                    }
+                                    acc += xd[xrow + (ix - pad)] * wd[wrow + dx];
+                                }
+                            }
+                        }
+                        out[((bi * cout + co) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+    }
+    // Counting convention (paper): padded taps still occupy a MAC slot in
+    // the accelerator schedule, so counts use the full kernel volume.
+    let weights = (cout * cin * kh * kw) as u64;
+    let positions = (bs * oh * ow) as u64;
+    let counts = OpCounts::dense_layer(weights, positions, (bs * cout * oh * ow) as u64);
+    (Tensor::new(&[bs, cout, oh, ow], out), counts)
+}
+
+/// Plain 2×2 average pooling (no counts) — convenience for custom
+/// pipelines like the subtractor-unit forward in the CLI.
+pub fn avgpool2(x: &Tensor) -> Tensor {
+    avgpool(x, 2).0
+}
+
+/// In-place tanh (no counts) — convenience for custom pipelines.
+pub fn tanh_inplace(x: &mut Tensor) {
+    for v in x.data_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// Dense layer returning only the output (no counts).
+pub fn dense_layer(x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
+    dense(x, w, b).0
+}
+
+fn avgpool(x: &Tensor, k: usize) -> (Tensor, OpCounts) {
+    let (bs, c, h, w) = dims4(x);
+    assert!(h % k == 0 && w % k == 0, "avgpool {k} on {h}x{w}");
+    let (oh, ow) = (h / k, w / k);
+    let mut out = vec![0f32; bs * c * oh * ow];
+    let xd = x.data();
+    let inv = 1.0 / (k * k) as f32;
+    for bi in 0..bs {
+        for ci in 0..c {
+            let base = (bi * c + ci) * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut s = 0f32;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            s += xd[base + (oy * k + dy) * w + ox * k + dx];
+                        }
+                    }
+                    out[((bi * c + ci) * oh + oy) * ow + ox] = s * inv;
+                }
+            }
+        }
+    }
+    let counts = OpCounts {
+        adds: (bs * c * oh * ow * (k * k - 1)) as u64,
+        muls: (bs * c * oh * ow) as u64,
+        ..Default::default()
+    };
+    (Tensor::new(&[bs, c, oh, ow], out), counts)
+}
+
+fn maxpool(x: &Tensor, k: usize, stride: usize) -> (Tensor, OpCounts) {
+    let (bs, c, h, w) = dims4(x);
+    assert!(h >= k && w >= k);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = vec![0f32; bs * c * oh * ow];
+    let xd = x.data();
+    for bi in 0..bs {
+        for ci in 0..c {
+            let base = (bi * c + ci) * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            m = m.max(xd[base + (oy * stride + dy) * w + ox * stride + dx]);
+                        }
+                    }
+                    out[((bi * c + ci) * oh + oy) * ow + ox] = m;
+                }
+            }
+        }
+    }
+    (Tensor::new(&[bs, c, oh, ow], out), OpCounts::default())
+}
+
+fn dense(x: &Tensor, w: &Tensor, b: &Tensor) -> (Tensor, OpCounts) {
+    assert_eq!(x.ndim(), 2, "dense expects (B, In), got {:?}", x.shape());
+    let (bs, nin) = (x.shape()[0], x.shape()[1]);
+    let (nout, win) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(nin, win, "dense in-features {nin} vs {win}");
+    let mut out = vec![0f32; bs * nout];
+    let xd = x.data();
+    let wd = w.data();
+    for bi in 0..bs {
+        let xrow = &xd[bi * nin..(bi + 1) * nin];
+        for o in 0..nout {
+            let wrow = &wd[o * nin..(o + 1) * nin];
+            let mut acc = b.data()[o];
+            for i in 0..nin {
+                acc += xrow[i] * wrow[i];
+            }
+            out[bi * nout + o] = acc;
+        }
+    }
+    let counts = OpCounts::dense_layer((nout * nin) as u64, bs as u64, (bs * nout) as u64);
+    (Tensor::new(&[bs, nout], out), counts)
+}
+
+fn dims4(t: &Tensor) -> (usize, usize, usize, usize) {
+    let s = t.shape();
+    assert_eq!(s.len(), 4, "expected 4-D tensor, got {:?}", s);
+    (s[0], s[1], s[2], s[3])
+}
+
+/// Row-wise softmax for a `(B, N)` tensor (used by examples for readable
+/// confidences; not part of the counted datapath).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    assert_eq!(x.ndim(), 2);
+    let (b, n) = (x.shape()[0], x.shape()[1]);
+    let mut out = vec![0f32; b * n];
+    for bi in 0..b {
+        let row = &x.data()[bi * n..(bi + 1) * n];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let exps: Vec<f32> = row.iter().map(|&v| (v - m).exp()).collect();
+        let s: f32 = exps.iter().sum();
+        for (o, e) in out[bi * n..(bi + 1) * n].iter_mut().zip(exps) {
+            *o = e / s;
+        }
+    }
+    Tensor::new(&[b, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_known_values() {
+        // 1x1x3x3 input, single 2x2 ones kernel, bias 1 → window sums + 1
+        let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32).collect());
+        let w = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let b = Tensor::new(&[1], vec![1.0]);
+        let (y, c) = conv2d(&x, &w, &b, 1, 0);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[9.0, 13.0, 21.0, 25.0]);
+        assert_eq!(c.muls, 16);
+        assert_eq!(c.adds, 16);
+        assert_eq!(c.bias_adds, 4);
+    }
+
+    #[test]
+    fn conv_stride_and_pad() {
+        let x = Tensor::full(&[1, 1, 4, 4], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let b = Tensor::zeros(&[1]);
+        let (y, _) = conv2d(&x, &w, &b, 2, 1);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        // corners of padded conv see 4 ones; pad=1 stride=2 grid
+        assert_eq!(y.data(), &[4.0, 6.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn avgpool_known() {
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 3., 5., 7.]);
+        let (y, _) = avgpool(&x, 2);
+        assert_eq!(y.data(), &[4.0]);
+    }
+
+    #[test]
+    fn maxpool_overlapping() {
+        let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32).collect());
+        let (y, _) = maxpool(&x, 3, 2);
+        assert_eq!(y.data(), &[8.0]);
+        let (y2, _) = maxpool(&x, 2, 1);
+        assert_eq!(y2.data(), &[4., 5., 7., 8.]);
+    }
+
+    #[test]
+    fn dense_known() {
+        let x = Tensor::new(&[1, 3], vec![1., 2., 3.]);
+        let w = Tensor::new(&[2, 3], vec![1., 0., 0., 0., 1., 1.]);
+        let b = Tensor::new(&[2], vec![0.5, -0.5]);
+        let (y, c) = dense(&x, &w, &b);
+        assert_eq!(y.data(), &[1.5, 4.5]);
+        assert_eq!(c.muls, 6);
+    }
+
+    #[test]
+    fn activations() {
+        let mut t = Tensor::new(&[3], vec![-1.0, 0.0, 1.0]);
+        let n = Activation::Relu.apply(&mut t);
+        assert_eq!(n, 3);
+        assert_eq!(t.data(), &[0.0, 0.0, 1.0]);
+        let mut t2 = Tensor::new(&[1], vec![0.0]);
+        Activation::Tanh.apply(&mut t2);
+        assert_eq!(t2.data(), &[0.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., -1., 0., 1.]);
+        let s = softmax_rows(&t);
+        for bi in 0..2 {
+            let sum: f32 = s.data()[bi * 3..(bi + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+}

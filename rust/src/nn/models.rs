@@ -1,0 +1,361 @@
+//! Model definitions: a composable [`Model`] (sequence of layers) plus the
+//! two networks the paper uses — LeNet-5 (the evaluation target, Fig 2)
+//! and AlexNet (the motivation figure, Fig 1).
+
+use super::layers::{Activation, Layer, LayerKind};
+use super::ops::{ForwardCounts, OpCounts};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// A sequential CNN.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Self {
+        Self { name: name.to_string(), layers }
+    }
+
+    /// Full forward pass with per-layer op accounting.
+    pub fn forward(&self, x: &Tensor) -> (Tensor, ForwardCounts) {
+        let mut counts = ForwardCounts::default();
+        let mut h = x.clone();
+        for layer in &self.layers {
+            let (out, c) = layer.forward(&h);
+            counts.push(&layer.name, c);
+            h = out;
+        }
+        (h, counts)
+    }
+
+    /// Forward pass, discarding counts.
+    pub fn infer(&self, x: &Tensor) -> Tensor {
+        self.forward(x).0
+    }
+
+    /// Per-layer wall-clock profile (layer name, seconds, counts) — the
+    /// measurement behind the Fig-1 reproduction.
+    pub fn profile(&self, x: &Tensor) -> Vec<(String, f64, OpCounts)> {
+        let mut h = x.clone();
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            let t0 = std::time::Instant::now();
+            let (next, c) = layer.forward(&h);
+            out.push((layer.name.clone(), t0.elapsed().as_secs_f64(), c));
+            h = next;
+        }
+        out
+    }
+
+    /// Conv layers as `(name, weight, bias, output positions)` — the
+    /// inputs the paper's preprocessor operates on.
+    pub fn conv_layers(&self, input: &[usize]) -> Vec<ConvLayerInfo> {
+        let mut shape = input.to_vec();
+        let mut infos = Vec::new();
+        for layer in &self.layers {
+            match &layer.kind {
+                LayerKind::Conv2d { weight, bias, stride, pad } => {
+                    let (h, w) = (shape[2] + 2 * pad, shape[3] + 2 * pad);
+                    let (kh, kw) = (weight.shape()[2], weight.shape()[3]);
+                    let oh = (h - kh) / stride + 1;
+                    let ow = (w - kw) / stride + 1;
+                    infos.push(ConvLayerInfo {
+                        name: layer.name.clone(),
+                        weight: weight.clone(),
+                        bias: bias.clone(),
+                        out_positions: oh * ow,
+                    });
+                    shape = vec![shape[0], weight.shape()[0], oh, ow];
+                }
+                LayerKind::AvgPool { k } => {
+                    shape = vec![shape[0], shape[1], shape[2] / k, shape[3] / k];
+                }
+                LayerKind::MaxPool { k, stride } => {
+                    shape = vec![
+                        shape[0],
+                        shape[1],
+                        (shape[2] - k) / stride + 1,
+                        (shape[3] - k) / stride + 1,
+                    ];
+                }
+                LayerKind::Flatten | LayerKind::Dense { .. } => {}
+            }
+        }
+        infos
+    }
+
+    /// Replace a conv layer's weights (used to install modified weights).
+    pub fn set_conv_weights(&mut self, name: &str, w: Tensor) {
+        for layer in &mut self.layers {
+            if layer.name == name {
+                if let LayerKind::Conv2d { weight, .. } = &mut layer.kind {
+                    assert_eq!(weight.shape(), w.shape(), "weight shape for {name}");
+                    *weight = w;
+                    return;
+                }
+            }
+        }
+        panic!("no conv layer named {name}");
+    }
+}
+
+/// Geometry + parameters of one conv layer, as consumed by Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct ConvLayerInfo {
+    pub name: String,
+    pub weight: Tensor,
+    pub bias: Tensor,
+    /// OH·OW for a single image — each weight is used this many times.
+    pub out_positions: usize,
+}
+
+fn randt(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect())
+}
+
+/// LeNet-5 (paper Fig 2) with Glorot-ish random weights (seeded).
+/// Use [`lenet5_from_params`] to install trained weights from
+/// `artifacts/weights.bin`.
+pub fn lenet5() -> Model {
+    let mut rng = Rng::seed_from_u64(7);
+    let conv = |rng: &mut Rng, name: &str, co: usize, ci: usize, k: usize| {
+        let scale = (6.0 / ((ci * k * k + co) as f32)).sqrt();
+        Layer::new(
+            name,
+            LayerKind::Conv2d {
+                weight: randt(rng, &[co, ci, k, k], scale),
+                bias: Tensor::zeros(&[co]),
+                stride: 1,
+                pad: 0,
+            },
+            Activation::Tanh,
+        )
+    };
+    let layers = vec![
+        conv(&mut rng, "c1", 6, 1, 5),
+        Layer::new("s2", LayerKind::AvgPool { k: 2 }, Activation::None),
+        conv(&mut rng, "c3", 16, 6, 5),
+        Layer::new("s4", LayerKind::AvgPool { k: 2 }, Activation::None),
+        conv(&mut rng, "c5", 120, 16, 5),
+        Layer::new("flat", LayerKind::Flatten, Activation::None),
+        Layer::new(
+            "f6",
+            LayerKind::Dense {
+                weight: randt(&mut rng, &[84, 120], 0.17),
+                bias: Tensor::zeros(&[84]),
+            },
+            Activation::Tanh,
+        ),
+        Layer::new(
+            "out",
+            LayerKind::Dense {
+                weight: randt(&mut rng, &[10, 84], 0.25),
+                bias: Tensor::zeros(&[10]),
+            },
+            Activation::None,
+        ),
+    ];
+    Model::new("lenet5", layers)
+}
+
+/// LeNet-5 with trained parameters (keys as in `python/compile/model.py`).
+pub fn lenet5_from_params(params: &HashMap<String, Tensor>) -> Model {
+    let get = |k: &str| params.get(k).unwrap_or_else(|| panic!("missing param {k}")).clone();
+    let conv = |name: &str, w: &str, b: &str| {
+        Layer::new(
+            name,
+            LayerKind::Conv2d { weight: get(w), bias: get(b), stride: 1, pad: 0 },
+            Activation::Tanh,
+        )
+    };
+    let layers = vec![
+        conv("c1", "c1_w", "c1_b"),
+        Layer::new("s2", LayerKind::AvgPool { k: 2 }, Activation::None),
+        conv("c3", "c3_w", "c3_b"),
+        Layer::new("s4", LayerKind::AvgPool { k: 2 }, Activation::None),
+        conv("c5", "c5_w", "c5_b"),
+        Layer::new("flat", LayerKind::Flatten, Activation::None),
+        Layer::new(
+            "f6",
+            LayerKind::Dense { weight: get("f6_w"), bias: get("f6_b") },
+            Activation::Tanh,
+        ),
+        Layer::new(
+            "out",
+            LayerKind::Dense { weight: get("out_w"), bias: get("out_b") },
+            Activation::None,
+        ),
+    ];
+    Model::new("lenet5", layers)
+}
+
+/// AlexNet (Krizhevsky 2012) with random weights — only its *structure*
+/// matters here: it drives the Fig-1 per-layer timing reproduction.
+pub fn alexnet() -> Model {
+    let mut rng = Rng::seed_from_u64(23);
+    let conv = |rng: &mut Rng,
+                name: &str,
+                co: usize,
+                ci: usize,
+                k: usize,
+                stride: usize,
+                pad: usize| {
+        let scale = (2.0 / ((ci * k * k) as f32)).sqrt();
+        Layer::new(
+            name,
+            LayerKind::Conv2d {
+                weight: randt(rng, &[co, ci, k, k], scale),
+                bias: Tensor::zeros(&[co]),
+                stride,
+                pad,
+            },
+            Activation::Relu,
+        )
+    };
+    let dense = |rng: &mut Rng, name: &str, o: usize, i: usize| {
+        Layer::new(
+            name,
+            LayerKind::Dense {
+                weight: randt(rng, &[o, i], (1.0 / i as f32).sqrt()),
+                bias: Tensor::zeros(&[o]),
+            },
+            Activation::Relu,
+        )
+    };
+    let layers = vec![
+        conv(&mut rng, "conv1", 96, 3, 11, 4, 0),
+        Layer::new("pool1", LayerKind::MaxPool { k: 3, stride: 2 }, Activation::None),
+        conv(&mut rng, "conv2", 256, 96, 5, 1, 2),
+        Layer::new("pool2", LayerKind::MaxPool { k: 3, stride: 2 }, Activation::None),
+        conv(&mut rng, "conv3", 384, 256, 3, 1, 1),
+        conv(&mut rng, "conv4", 384, 384, 3, 1, 1),
+        conv(&mut rng, "conv5", 256, 384, 3, 1, 1),
+        Layer::new("pool5", LayerKind::MaxPool { k: 3, stride: 2 }, Activation::None),
+        Layer::new("flat", LayerKind::Flatten, Activation::None),
+        dense(&mut rng, "fc6", 4096, 256 * 6 * 6),
+        dense(&mut rng, "fc7", 4096, 4096),
+        Layer::new(
+            "fc8",
+            LayerKind::Dense {
+                weight: randt(&mut rng, &[1000, 4096], 0.015),
+                bias: Tensor::zeros(&[1000]),
+            },
+            Activation::None,
+        ),
+    ];
+    Model::new("alexnet", layers)
+}
+
+/// VGG-style small network (3×3 conv stacks, 32×32×3 input — CIFAR-class)
+/// with seeded random weights. Used by the generality bench: the pairing
+/// statistics depend only on the weight distribution, which random init
+/// shares with trained nets (zero-centred, near-symmetric).
+pub fn vgg_small() -> Model {
+    let mut rng = Rng::seed_from_u64(31);
+    let conv = |rng: &mut Rng, name: &str, co: usize, ci: usize| {
+        let scale = (2.0 / ((ci * 9) as f32)).sqrt();
+        Layer::new(
+            name,
+            LayerKind::Conv2d {
+                weight: randt(rng, &[co, ci, 3, 3], scale),
+                bias: Tensor::zeros(&[co]),
+                stride: 1,
+                pad: 1,
+            },
+            Activation::Relu,
+        )
+    };
+    let pool = |name: &str| Layer::new(name, LayerKind::MaxPool { k: 2, stride: 2 }, Activation::None);
+    let layers = vec![
+        conv(&mut rng, "conv1_1", 32, 3),
+        conv(&mut rng, "conv1_2", 32, 32),
+        pool("pool1"),
+        conv(&mut rng, "conv2_1", 64, 32),
+        conv(&mut rng, "conv2_2", 64, 64),
+        pool("pool2"),
+        conv(&mut rng, "conv3_1", 128, 64),
+        conv(&mut rng, "conv3_2", 128, 128),
+        pool("pool3"),
+        Layer::new("flat", LayerKind::Flatten, Activation::None),
+        Layer::new(
+            "fc1",
+            LayerKind::Dense {
+                weight: randt(&mut rng, &[256, 128 * 4 * 4], 0.03),
+                bias: Tensor::zeros(&[256]),
+            },
+            Activation::Relu,
+        ),
+        Layer::new(
+            "fc2",
+            LayerKind::Dense {
+                weight: randt(&mut rng, &[10, 256], 0.06),
+                bias: Tensor::zeros(&[10]),
+            },
+            Activation::None,
+        ),
+    ];
+    Model::new("vgg_small", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg_small_shapes() {
+        let m = vgg_small();
+        let x = Tensor::zeros(&[1, 3, 32, 32]);
+        let (y, counts) = m.forward(&x);
+        assert_eq!(y.shape(), &[1, 10]);
+        // 3×3 pad-1 stacks: conv MACs ≈ 38.8 M
+        let conv_muls: u64 = counts
+            .per_layer
+            .iter()
+            .filter(|(n, _)| n.starts_with("conv"))
+            .map(|(_, c)| c.muls)
+            .sum();
+        assert!(conv_muls > 35_000_000 && conv_muls < 45_000_000, "{conv_muls}");
+    }
+
+    #[test]
+    fn conv_layers_geometry_lenet() {
+        let m = lenet5();
+        let infos = m.conv_layers(&[1, 1, 32, 32]);
+        assert_eq!(infos.len(), 3);
+        assert_eq!(infos[0].out_positions, 28 * 28);
+        assert_eq!(infos[1].out_positions, 10 * 10);
+        assert_eq!(infos[2].out_positions, 1);
+        let total: usize = infos
+            .iter()
+            .map(|i| i.weight.len() * i.out_positions)
+            .sum();
+        assert_eq!(total, 405_600);
+    }
+
+    #[test]
+    fn set_conv_weights_roundtrip() {
+        let mut m = lenet5();
+        let w = Tensor::full(&[6, 1, 5, 5], 0.5);
+        m.set_conv_weights("c1", w.clone());
+        let infos = m.conv_layers(&[1, 1, 32, 32]);
+        assert_eq!(infos[0].weight, w);
+    }
+
+    #[test]
+    #[should_panic(expected = "no conv layer")]
+    fn set_unknown_layer_panics() {
+        lenet5().set_conv_weights("nope", Tensor::zeros(&[1, 1, 1, 1]));
+    }
+
+    #[test]
+    fn lenet_deterministic_seed() {
+        let a = lenet5().infer(&Tensor::full(&[1, 1, 32, 32], 0.3));
+        let b = lenet5().infer(&Tensor::full(&[1, 1, 32, 32], 0.3));
+        assert_eq!(a, b);
+    }
+}

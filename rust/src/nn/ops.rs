@@ -1,0 +1,126 @@
+//! Operation accounting shared by the dense engine and the subtractor
+//! unit. Table-1 semantics (see DESIGN.md): a MAC is 1 multiply + 1
+//! accumulate-add; a combined pair is 1 subtract + 1 multiply + 1
+//! accumulate-add; bias adds and activation evaluations are tracked
+//! separately and excluded from the paper's headline columns.
+
+use std::ops::{Add, AddAssign};
+
+/// Arithmetic-operation counts for one layer or one whole inference.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Multiplications on the MAC/pair datapath.
+    pub muls: u64,
+    /// Accumulate additions on the MAC/pair datapath.
+    pub adds: u64,
+    /// Input subtractions on the pair datapath (the paper's contribution).
+    pub subs: u64,
+    /// Bias additions (excluded from Table 1, tracked for the cost model).
+    pub bias_adds: u64,
+    /// Non-linearity evaluations (tanh/relu/softmax elements).
+    pub activations: u64,
+}
+
+impl OpCounts {
+    /// Table-1 "Total" column: adds + subs + muls.
+    pub fn table1_total(&self) -> u64 {
+        self.adds + self.subs + self.muls
+    }
+
+    /// Counts for a dense conv/FC layer of `weights` weights applied at
+    /// `positions` output positions (baseline: every weight is a MAC).
+    pub fn dense_layer(weights: u64, positions: u64, biases: u64) -> Self {
+        OpCounts {
+            muls: weights * positions,
+            adds: weights * positions,
+            subs: 0,
+            bias_adds: biases,
+            activations: 0,
+        }
+    }
+
+    /// Counts for a paired layer: `pairs` combined pairs and `unpaired`
+    /// plain weights per filter set, applied at `positions` positions.
+    pub fn paired_layer(pairs: u64, unpaired: u64, positions: u64, biases: u64) -> Self {
+        OpCounts {
+            // each pair: 1 sub + 1 mul + 1 accumulate; each unpaired: 1 MAC
+            muls: (pairs + unpaired) * positions,
+            adds: (pairs + unpaired) * positions,
+            subs: pairs * positions,
+            bias_adds: biases,
+            activations: 0,
+        }
+    }
+}
+
+impl Add for OpCounts {
+    type Output = OpCounts;
+    fn add(self, o: OpCounts) -> OpCounts {
+        OpCounts {
+            muls: self.muls + o.muls,
+            adds: self.adds + o.adds,
+            subs: self.subs + o.subs,
+            bias_adds: self.bias_adds + o.bias_adds,
+            activations: self.activations + o.activations,
+        }
+    }
+}
+
+impl AddAssign for OpCounts {
+    fn add_assign(&mut self, o: OpCounts) {
+        *self = *self + o;
+    }
+}
+
+/// Per-layer counts for a full forward pass.
+#[derive(Debug, Default, Clone)]
+pub struct ForwardCounts {
+    pub per_layer: Vec<(String, OpCounts)>,
+}
+
+impl ForwardCounts {
+    pub fn push(&mut self, name: &str, c: OpCounts) {
+        self.per_layer.push((name.to_string(), c));
+    }
+
+    pub fn total(&self) -> OpCounts {
+        self.per_layer.iter().fold(OpCounts::default(), |a, (_, c)| a + *c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_layer_is_macs() {
+        let c = OpCounts::dense_layer(25, 784, 6);
+        assert_eq!(c.muls, 19_600);
+        assert_eq!(c.adds, 19_600);
+        assert_eq!(c.subs, 0);
+        assert_eq!(c.bias_adds, 6);
+        assert_eq!(c.table1_total(), 39_200);
+    }
+
+    #[test]
+    fn paired_layer_identity() {
+        // 10 weights, 3 pairs → 4 unpaired; at 7 positions
+        let base = OpCounts::dense_layer(10, 7, 0);
+        let p = OpCounts::paired_layer(3, 4, 7, 0);
+        assert_eq!(p.subs, 21);
+        assert_eq!(p.muls, base.muls - 21);
+        assert_eq!(p.adds, base.adds - 21);
+        assert_eq!(p.table1_total(), base.table1_total() - 21);
+    }
+
+    #[test]
+    fn sum_and_total() {
+        let mut f = ForwardCounts::default();
+        f.push("a", OpCounts::dense_layer(2, 3, 1));
+        f.push("b", OpCounts::paired_layer(1, 0, 3, 1));
+        let t = f.total();
+        assert_eq!(t.muls, 6 + 3);
+        assert_eq!(t.subs, 3);
+        assert_eq!(t.bias_adds, 2);
+    }
+}

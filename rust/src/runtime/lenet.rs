@@ -1,0 +1,142 @@
+//! LeNet-5 executor: one compiled artifact + the (possibly modified)
+//! weight literals, ready to classify batches.
+//!
+//! The HLO artifact takes weights as *arguments* (see
+//! `python/compile/aot.py`), so a single compilation serves every
+//! rounding variant: installing a variant only swaps the cached weight
+//! literals — no recompile on the serving path.
+
+use super::{tensor_to_literal, Executable, Runtime};
+use crate::accel::LayerPairing;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parameter wire order — must match `python/compile/model.py::PARAM_NAMES`.
+pub const PARAM_NAMES: [&str; 10] = [
+    "c1_w", "c1_b", "c3_w", "c3_b", "c5_w", "c5_b", "f6_w", "f6_b", "out_w", "out_b",
+];
+
+/// Conv layers subject to preprocessing: (weight key, rust engine name).
+pub const CONV_KEYS: [(&str, &str); 3] = [("c1_w", "c1"), ("c3_w", "c3"), ("c5_w", "c5")];
+
+/// Which artifact family to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Pallas-kernel forward (`lenet5_b{B}.hlo.txt`) — the paper-integrated path.
+    Pallas,
+    /// lax.conv forward (`lenet5_xla_b{B}.hlo.txt`) — XLA-native §Perf baseline.
+    XlaNative,
+}
+
+impl Variant {
+    pub fn artifact(&self, batch: usize) -> String {
+        match self {
+            Variant::Pallas => format!("lenet5_b{batch}.hlo.txt"),
+            Variant::XlaNative => format!("lenet5_xla_b{batch}.hlo.txt"),
+        }
+    }
+}
+
+/// A compiled LeNet-5 with installed weights.
+pub struct LeNet5Executor {
+    exe: Executable,
+    batch: usize,
+    /// Cached weight literals in wire order.
+    weight_literals: Vec<xla::Literal>,
+    /// The dense weights currently installed (for introspection/tests).
+    weights: HashMap<String, Tensor>,
+    /// Rounding used to derive the installed weights (0 = original).
+    rounding: f32,
+}
+
+impl LeNet5Executor {
+    /// Load `artifacts/<variant>_b<batch>.hlo.txt` and install weights.
+    pub fn load(
+        rt: &Runtime,
+        artifacts_dir: impl AsRef<Path>,
+        variant: Variant,
+        batch: usize,
+        weights: &HashMap<String, Tensor>,
+    ) -> Result<Self> {
+        let path = artifacts_dir.as_ref().join(variant.artifact(batch));
+        let exe = rt.load_hlo(&path)?;
+        let mut s = Self {
+            exe,
+            batch,
+            weight_literals: Vec::new(),
+            weights: HashMap::new(),
+            rounding: 0.0,
+        };
+        s.install_weights(weights, 0.0)?;
+        Ok(s)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn rounding(&self) -> f32 {
+        self.rounding
+    }
+
+    pub fn weights(&self) -> &HashMap<String, Tensor> {
+        &self.weights
+    }
+
+    /// Install a weight set as the executor's cached literals.
+    pub fn install_weights(
+        &mut self,
+        weights: &HashMap<String, Tensor>,
+        rounding: f32,
+    ) -> Result<()> {
+        let mut lits = Vec::with_capacity(PARAM_NAMES.len());
+        for name in PARAM_NAMES {
+            let t = weights
+                .get(name)
+                .with_context(|| format!("weights missing {name}"))?;
+            lits.push(tensor_to_literal(t)?);
+        }
+        self.weight_literals = lits;
+        self.weights = weights.clone();
+        self.rounding = rounding;
+        Ok(())
+    }
+
+    /// Apply the paper's preprocessor at `rounding` to the conv layers of
+    /// `base` weights and install the modified set. Returns total pairs.
+    pub fn install_variant(
+        &mut self,
+        base: &HashMap<String, Tensor>,
+        rounding: f32,
+    ) -> Result<usize> {
+        let mut modified = base.clone();
+        let mut pairs = 0;
+        for (key, _) in CONV_KEYS {
+            let w = base.get(key).with_context(|| format!("missing {key}"))?;
+            let pairing = LayerPairing::from_weights(w, rounding);
+            pairs += pairing.total_pairs();
+            modified.insert(key.to_string(), pairing.modified_weights(w));
+        }
+        self.install_weights(&modified, rounding)?;
+        Ok(pairs)
+    }
+
+    /// Classify a `(B, 1, 32, 32)` batch → `(B, 10)` logits.
+    pub fn execute(&self, batch: &Tensor) -> Result<Tensor> {
+        if batch.shape() != [self.batch, 1, 32, 32] {
+            bail!(
+                "executor compiled for batch {}, got input {:?}",
+                self.batch,
+                batch.shape()
+            );
+        }
+        let image = tensor_to_literal(batch)?;
+        // weight literals are cached; only the image is materialized per call
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weight_literals.len());
+        refs.push(&image);
+        refs.extend(self.weight_literals.iter());
+        self.exe.run(&refs)
+    }
+}

@@ -1,0 +1,117 @@
+//! PJRT runtime: loads the AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). All artifacts
+//! are lowered with `return_tuple=True`, so results unwrap with
+//! `to_tuple1`.
+//!
+//! The PJRT client is not `Sync`; the coordinator therefore owns the
+//! executor on a dedicated worker thread (actor pattern) — see
+//! [`crate::coordinator`].
+
+mod lenet;
+mod paired;
+
+pub use lenet::{LeNet5Executor, Variant};
+pub use paired::{PairedLeNet5Executor, PAIRED_TABLE_SIZES};
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus helpers to load artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Construct a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs (owned or borrowed); unwraps the
+    /// 1-tuple output and returns the result as a [`Tensor`] (f32).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(&self, inputs: &[L]) -> Result<Tensor> {
+        let result = self
+            .exe
+            .execute(inputs)
+            .with_context(|| format!("execute {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrap 1-tuple output")?;
+        literal_to_tensor(&out)
+    }
+}
+
+/// Convert a [`Tensor`] into an `xla::Literal` of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Convert an f32 `xla::Literal` back into a [`Tensor`].
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("literal to f32 vec")?;
+    Ok(Tensor::new(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/ (integration);
+    // here we only cover the pure conversion helpers.
+    #[test]
+    fn tensor_literal_roundtrip() -> Result<()> {
+        let t = Tensor::new(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.0]);
+        let l = tensor_to_literal(&t)?;
+        let back = literal_to_tensor(&l)?;
+        assert_eq!(back, t);
+        Ok(())
+    }
+
+    #[test]
+    fn scalarish_roundtrip() -> Result<()> {
+        let t = Tensor::new(&[1], vec![42.0]);
+        let back = literal_to_tensor(&tensor_to_literal(&t)?)?;
+        assert_eq!(back.data(), &[42.0]);
+        Ok(())
+    }
+}

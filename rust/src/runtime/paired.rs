@@ -1,0 +1,124 @@
+//! Executor for the fully-paired LeNet-5 artifact — the configuration
+//! where the paper's subtractor datapath *is* the served model: every
+//! conv layer of `lenet5_paired_b{B}.hlo.txt` takes runtime pairing
+//! tables (from Algorithm 1, run here in rust) instead of dense weights.
+
+use super::{tensor_to_literal, Executable, Runtime};
+use crate::accel::LayerPairing;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Fixed padded table sizes per conv layer: (weight key, Pmax, Umax).
+/// Must match `python/compile/model.py::PAIRED_TABLE_SIZES`.
+pub const PAIRED_TABLE_SIZES: [(&str, usize, usize); 3] =
+    [("c1", 12, 25), ("c3", 75, 150), ("c5", 200, 400)];
+
+/// A compiled fully-paired LeNet-5 with installed pairing tables.
+pub struct PairedLeNet5Executor {
+    exe: Executable,
+    batch: usize,
+    /// Cached argument literals after the image: 3 layers × 6 tables + head.
+    table_literals: Vec<xla::Literal>,
+    /// Pairs found per layer at the installed rounding.
+    pairs_per_layer: Vec<usize>,
+    rounding: f32,
+}
+
+impl PairedLeNet5Executor {
+    /// Load `artifacts/lenet5_paired_b<batch>.hlo.txt` and install the
+    /// pairing derived from `weights` at `rounding`.
+    pub fn load(
+        rt: &Runtime,
+        artifacts_dir: impl AsRef<Path>,
+        batch: usize,
+        weights: &HashMap<String, Tensor>,
+        rounding: f32,
+    ) -> Result<Self> {
+        let path = artifacts_dir.as_ref().join(format!("lenet5_paired_b{batch}.hlo.txt"));
+        let exe = rt.load_hlo(&path)?;
+        let mut s = Self {
+            exe,
+            batch,
+            table_literals: Vec::new(),
+            pairs_per_layer: Vec::new(),
+            rounding,
+        };
+        s.install(weights, rounding)?;
+        Ok(s)
+    }
+
+    pub fn rounding(&self) -> f32 {
+        self.rounding
+    }
+
+    pub fn pairs_per_layer(&self) -> &[usize] {
+        &self.pairs_per_layer
+    }
+
+    /// Run Algorithm 1 per conv layer and cache the padded table literals.
+    pub fn install(&mut self, weights: &HashMap<String, Tensor>, rounding: f32) -> Result<()> {
+        let mut lits = Vec::new();
+        let mut pairs_per_layer = Vec::new();
+        for (name, pmax, umax) in PAIRED_TABLE_SIZES {
+            let w = weights
+                .get(&format!("{name}_w"))
+                .with_context(|| format!("missing {name}_w"))?;
+            let b = weights
+                .get(&format!("{name}_b"))
+                .with_context(|| format!("missing {name}_b"))?;
+            let pairing = LayerPairing::from_weights(w, rounding);
+            pairs_per_layer.push(pairing.total_pairs());
+            let cout = w.shape()[0];
+            let mut i1 = vec![0i32; cout * pmax];
+            let mut i2 = vec![0i32; cout * pmax];
+            let mut pk = vec![0f32; cout * pmax];
+            let mut iu = vec![0i32; cout * umax];
+            let mut wu = vec![0f32; cout * umax];
+            for (c, f) in pairing.filters.iter().enumerate() {
+                if f.n_pairs() > pmax || f.n_unpaired() > umax {
+                    bail!("{name}: pairing exceeds artifact table sizes");
+                }
+                for j in 0..f.n_pairs() {
+                    i1[c * pmax + j] = f.pair_i1[j] as i32;
+                    i2[c * pmax + j] = f.pair_i2[j] as i32;
+                    pk[c * pmax + j] = f.pair_k[j];
+                }
+                for j in 0..f.n_unpaired() {
+                    iu[c * umax + j] = f.unp_idx[j] as i32;
+                    wu[c * umax + j] = f.unp_w[j];
+                }
+            }
+            let dims_p = [cout as i64, pmax as i64];
+            let dims_u = [cout as i64, umax as i64];
+            lits.push(xla::Literal::vec1(&i1).reshape(&dims_p)?);
+            lits.push(xla::Literal::vec1(&i2).reshape(&dims_p)?);
+            lits.push(xla::Literal::vec1(&pk).reshape(&dims_p)?);
+            lits.push(xla::Literal::vec1(&iu).reshape(&dims_u)?);
+            lits.push(xla::Literal::vec1(&wu).reshape(&dims_u)?);
+            lits.push(tensor_to_literal(b)?);
+        }
+        for key in ["f6_w", "f6_b", "out_w", "out_b"] {
+            let t = weights.get(key).with_context(|| format!("missing {key}"))?;
+            lits.push(tensor_to_literal(t)?);
+        }
+        self.table_literals = lits;
+        self.rounding = rounding;
+        self.pairs_per_layer = pairs_per_layer;
+        Ok(())
+    }
+
+    /// Classify a `(B, 1, 32, 32)` batch → `(B, 10)` logits, entirely on
+    /// the paired subtractor datapath.
+    pub fn execute(&self, batch: &Tensor) -> Result<Tensor> {
+        if batch.shape() != [self.batch, 1, 32, 32] {
+            bail!("compiled for batch {}, got {:?}", self.batch, batch.shape());
+        }
+        let image = tensor_to_literal(batch)?;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(1 + self.table_literals.len());
+        refs.push(&image);
+        refs.extend(self.table_literals.iter());
+        self.exe.run(&refs)
+    }
+}

@@ -1,0 +1,96 @@
+//! im2col patch extraction — the layout contract shared with the python
+//! kernels (`python/compile/kernels/ref.py::im2col`): the patch axis is
+//! ordered `(c, dy, dx)`, exactly the order `w.reshape(Cout, -1)` produces
+//! from OIHW weights. Both the dense engine and the subtractor unit index
+//! patches with the same flat weight index, so the orders must agree.
+
+use super::Tensor;
+
+/// Result of patch extraction: a `(B*OH*OW, K)` matrix plus geometry.
+pub struct Im2col {
+    /// `(rows, k)` patch matrix, row-major.
+    pub patches: Tensor,
+    pub batch: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    /// K = C·kh·kw.
+    pub k: usize,
+}
+
+/// Extract valid-convolution patches from an NCHW tensor.
+///
+/// `x`: `(B, C, H, W)` → rows ordered `(b, oy, ox)`, columns ordered
+/// `(c, dy, dx)`.
+pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> Im2col {
+    let s = x.shape();
+    assert_eq!(s.len(), 4, "im2col expects NCHW, got {:?}", s);
+    let (b, c, h, w) = (s[0], s[1], s[2], s[3]);
+    assert!(h >= kh && w >= kw, "kernel {kh}x{kw} larger than input {h}x{w}");
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let k = c * kh * kw;
+    let rows = b * oh * ow;
+    let mut out = vec![0f32; rows * k];
+    let xd = x.data();
+
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((bi * oh + oy) * ow + ox) * k;
+                let mut col = 0;
+                for ci in 0..c {
+                    let base = ((bi * c + ci) * h + oy) * w + ox;
+                    for dy in 0..kh {
+                        let src = base + dy * w;
+                        out[row + col..row + col + kw]
+                            .copy_from_slice(&xd[src..src + kw]);
+                        col += kw;
+                    }
+                }
+            }
+        }
+    }
+    Im2col { patches: Tensor::new(&[rows, k], out), batch: b, out_h: oh, out_w: ow, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_patch_identity() {
+        // kernel as large as the input → one patch per (b, c) in (c,dy,dx) order
+        let x = Tensor::new(&[1, 2, 2, 2], (0..8).map(|v| v as f32).collect());
+        let ic = im2col(&x, 2, 2);
+        assert_eq!(ic.patches.shape(), &[1, 8]);
+        assert_eq!(ic.patches.data(), &[0., 1., 2., 3., 4., 5., 6., 7.]);
+        assert_eq!((ic.out_h, ic.out_w), (1, 1));
+    }
+
+    #[test]
+    fn ordering_c_dy_dx() {
+        // 1 channel 3x3 input, 2x2 kernel → 4 patches
+        let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32).collect());
+        let ic = im2col(&x, 2, 2);
+        assert_eq!(ic.patches.shape(), &[4, 4]);
+        // patch at (oy=0, ox=0): rows [0,1], cols [0,1] → 0,1,3,4
+        assert_eq!(&ic.patches.data()[0..4], &[0., 1., 3., 4.]);
+        // patch at (oy=1, ox=1): 4,5,7,8
+        assert_eq!(&ic.patches.data()[12..16], &[4., 5., 7., 8.]);
+    }
+
+    #[test]
+    fn batch_rows_ordered() {
+        let x = Tensor::new(&[2, 1, 2, 2], (0..8).map(|v| v as f32).collect());
+        let ic = im2col(&x, 2, 2);
+        assert_eq!(ic.patches.shape(), &[2, 4]);
+        assert_eq!(&ic.patches.data()[0..4], &[0., 1., 2., 3.]);
+        assert_eq!(&ic.patches.data()[4..8], &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than input")]
+    fn oversized_kernel_panics() {
+        let x = Tensor::zeros(&[1, 1, 2, 2]);
+        im2col(&x, 3, 3);
+    }
+}

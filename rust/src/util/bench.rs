@@ -1,0 +1,123 @@
+//! Micro-benchmark harness (stand-in for `criterion`): warmup, repeated
+//! timed runs, mean/median/min/stddev, readable one-line report. Used by
+//! every target in `benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} ±{:>10}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.min),
+            fmt_dur(self.stddev),
+            self.iters
+        )
+    }
+
+    /// Throughput in items/sec given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.mean.as_secs_f64()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` with warmup, then time `iters` runs. `f` should return
+/// something cheap (e.g. a checksum) to inhibit dead-code elimination;
+/// the value is passed through `std::hint::black_box` anyway.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let mean = total / iters as u32;
+    let median = samples[iters / 2];
+    let min = samples[0];
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|s| (s.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        median,
+        min,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// Column header matching [`BenchResult::report`].
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12} {:>11}",
+        "benchmark", "mean", "median", "min", "stddev"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || {
+            n += 1;
+            n
+        });
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12); // warmup + timed
+        assert!(r.min <= r.median && r.median <= r.mean + r.stddev * 10);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(5)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput() {
+        let r = bench("sleepless", 0, 3, || std::thread::sleep(Duration::from_millis(1)));
+        let t = r.throughput(100);
+        assert!(t > 10.0 && t < 100_000.0, "{t}");
+    }
+}

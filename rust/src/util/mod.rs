@@ -1,0 +1,15 @@
+//! In-tree utilities replacing crates the offline vendor set lacks:
+//! a seeded PRNG (`rand`), scratch directories (`tempfile`), a micro
+//! benchmark harness (`criterion`), and a property-testing loop
+//! (`proptest`). Small by design; each piece covers exactly what this
+//! repo needs and is tested here.
+
+mod bench;
+mod proptest;
+mod rng;
+mod tempdir;
+
+pub use bench::{bench, header as bench_header, BenchResult};
+pub use proptest::{forall, Gen};
+pub use rng::Rng;
+pub use tempdir::TempDir;

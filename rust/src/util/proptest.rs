@@ -1,0 +1,68 @@
+//! Minimal property-testing loop (stand-in for `proptest`): generate N
+//! random cases from a seeded [`Gen`], run the property, and on failure
+//! report the case index + seed so the exact case replays.
+
+use super::rng::Rng;
+
+/// Case generator handed to properties: a seeded RNG plus the case index.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Random vector of weights in [-scale, scale] with random length in
+    /// [1, max_len] — the common input shape for pairing properties.
+    pub fn weights(&mut self, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = 1 + self.rng.below(max_len);
+        self.rng.vec_range(n, -scale, scale)
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics with a replayable
+/// message on the first failing case (properties signal failure by
+/// returning `Err(reason)`).
+pub fn forall(name: &str, seed: u64, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        // derive an independent stream per case so failures replay alone
+        let mut g = Gen { rng: Rng::seed_from_u64(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)), case };
+        if let Err(reason) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {reason}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("count", 1, 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'bad' failed at case 3")]
+    fn failing_property_reports_case() {
+        forall("bad", 1, 10, |g| if g.case == 3 { Err("boom".into()) } else { Ok(()) });
+    }
+
+    #[test]
+    fn weights_within_bounds() {
+        forall("weights-gen", 2, 20, |g| {
+            let w = g.weights(50, 0.5);
+            if w.is_empty() || w.len() > 50 {
+                return Err(format!("bad len {}", w.len()));
+            }
+            if w.iter().any(|&v| !(-0.5..=0.5).contains(&v)) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

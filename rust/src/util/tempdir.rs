@@ -1,0 +1,70 @@
+//! Scratch directory with drop-cleanup (stand-in for the `tempfile`
+//! crate). Unique per process + counter, rooted under the system temp dir.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A directory removed (recursively) on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh scratch directory.
+    pub fn new() -> std::io::Result<Self> {
+        let id = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "subaccel-{}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0),
+            id
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Path of a file inside the directory.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_write_cleanup() {
+        let p;
+        {
+            let d = TempDir::new().unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(d.file("x.txt"), b"hello").unwrap();
+            assert!(d.file("x.txt").exists());
+        }
+        assert!(!p.exists(), "tempdir not cleaned up");
+    }
+
+    #[test]
+    fn dirs_are_unique() {
+        let a = TempDir::new().unwrap();
+        let b = TempDir::new().unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

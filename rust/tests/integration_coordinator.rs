@@ -1,0 +1,226 @@
+//! Coordinator integration: the full serving pipeline under concurrent
+//! load, variant switching, backpressure, and clean shutdown. Skips when
+//! artifacts are missing.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+use subaccel::coordinator::{Coordinator, ServeConfig};
+use subaccel::data::{load_dataset, load_weights};
+use subaccel::nn::lenet5_from_params;
+use subaccel::runtime::Variant;
+
+const ART: &str = "artifacts";
+
+fn artifacts_ready() -> bool {
+    let ok = Path::new(ART).join("weights.bin").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn cfg(batch: usize) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: ART.into(),
+        variant: Variant::XlaNative,
+        batch_size: batch,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 256,
+        rounding: 0.0,
+        workers: 1,
+    }
+}
+
+#[test]
+fn serves_correct_results_under_concurrency() {
+    if !artifacts_ready() {
+        return;
+    }
+    let coord = Arc::new(Coordinator::start(cfg(8)).unwrap());
+    let ds = Arc::new(load_dataset(Path::new(ART).join("dataset.bin")).unwrap());
+    let model = lenet5_from_params(&load_weights(Path::new(ART).join("weights.bin")).unwrap());
+
+    // expected predictions from the rust oracle
+    let n = 48usize;
+    let expected: Vec<usize> =
+        (0..n).map(|i| model.infer(&ds.image32(i)).argmax_rows()[0]).collect();
+
+    let handles: Vec<_> = (0..6)
+        .map(|c| {
+            let coord = coord.clone();
+            let ds = ds.clone();
+            std::thread::spawn(move || {
+                let mut preds = Vec::new();
+                for i in (c * 8)..(c * 8 + 8) {
+                    let logits = loop {
+                        match coord.classify(ds.image32(i)) {
+                            Ok(l) => break l,
+                            Err(_) => std::thread::sleep(Duration::from_micros(100)),
+                        }
+                    };
+                    let pred = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(j, _)| j)
+                        .unwrap();
+                    preds.push((i, pred));
+                }
+                preds
+            })
+        })
+        .collect();
+    for h in handles {
+        for (i, pred) in h.join().unwrap() {
+            assert_eq!(pred, expected[i], "request {i} diverged from oracle");
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), n as u64);
+    assert!(m.batches.load(std::sync::atomic::Ordering::Relaxed) >= (n / 8) as u64);
+}
+
+#[test]
+fn partial_batches_flush_on_deadline() {
+    if !artifacts_ready() {
+        return;
+    }
+    let coord = Coordinator::start(cfg(8)).unwrap();
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    // a single request must still complete (padded batch)
+    let logits = coord.classify(ds.image32(0)).unwrap();
+    assert_eq!(logits.len(), 10);
+    let m = coord.metrics();
+    assert!(m.mean_batch_size() <= 1.5);
+    coord.shutdown();
+}
+
+#[test]
+fn variant_switch_changes_weights_and_keeps_serving() {
+    if !artifacts_ready() {
+        return;
+    }
+    let coord = Coordinator::start(cfg(8)).unwrap();
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    let a = coord.classify(ds.image32(0)).unwrap();
+    let pairs = coord.set_rounding(0.3).unwrap();
+    assert!(pairs > 1000, "rounding 0.3 should combine heavily, got {pairs}");
+    let b = coord.classify(ds.image32(0)).unwrap();
+    // logits must differ (weights changed), but service stayed up
+    let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+    assert!(diff > 1e-6, "variant switch had no effect");
+    let back = coord.set_rounding(0.0).unwrap();
+    assert_eq!(back, 0);
+    let c = coord.classify(ds.image32(0)).unwrap();
+    let diff0: f32 = a.iter().zip(&c).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+    assert!(diff0 < 1e-6, "rounding 0 should restore original weights");
+    coord.shutdown();
+}
+
+#[test]
+fn rejects_wrong_shape_and_applies_backpressure() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut c = cfg(8);
+    c.queue_cap = 2;
+    let coord = Coordinator::start(c).unwrap();
+    // wrong shape fails fast
+    let err = coord.classify(subaccel::tensor::Tensor::zeros(&[1, 1, 28, 28])).unwrap_err();
+    assert!(err.to_string().contains("expected (1,1,32,32)"), "{err}");
+    // flooding a tiny queue must produce rejections (fire-and-forget)
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    let mut rxs = Vec::new();
+    let mut rejected = 0;
+    for i in 0..64 {
+        match coord.submit(ds.image32(i % ds.n)) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    // drain what was accepted
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let m = coord.metrics();
+    assert_eq!(m.rejected.load(std::sync::atomic::Ordering::Relaxed), rejected);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_pending_requests() {
+    if !artifacts_ready() {
+        return;
+    }
+    let coord = Coordinator::start(cfg(32)).unwrap();
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    let rxs: Vec<_> = (0..5).map(|i| coord.submit(ds.image32(i)).unwrap()).collect();
+    coord.shutdown(); // must flush the partial batch, not drop it
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let logits = rx.recv().expect("reply delivered").expect("classified");
+        assert_eq!(logits.len(), 10, "request {i}");
+    }
+}
+
+#[test]
+fn replicated_workers_serve_and_switch_together() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut c = cfg(8);
+    c.workers = 2;
+    let coord = Arc::new(Coordinator::start(c).unwrap());
+    let ds = Arc::new(load_dataset(Path::new(ART).join("dataset.bin")).unwrap());
+    let model = lenet5_from_params(&load_weights(Path::new(ART).join("weights.bin")).unwrap());
+    let expected: Vec<usize> =
+        (0..32).map(|i| model.infer(&ds.image32(i)).argmax_rows()[0]).collect();
+
+    // concurrent load across both replicas must match the oracle
+    let handles: Vec<_> = (0..4)
+        .map(|c_id| {
+            let coord = coord.clone();
+            let ds = ds.clone();
+            std::thread::spawn(move || {
+                (c_id * 8..c_id * 8 + 8)
+                    .map(|i| {
+                        let logits = coord.classify(ds.image32(i)).unwrap();
+                        logits
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.total_cmp(b.1))
+                            .map(|(j, _)| j)
+                            .unwrap()
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    for (c_id, h) in handles.into_iter().enumerate() {
+        for (k, pred) in h.join().unwrap().into_iter().enumerate() {
+            assert_eq!(pred, expected[c_id * 8 + k]);
+        }
+    }
+
+    // a variant switch must reach BOTH replicas before returning: every
+    // post-switch request sees the new weights no matter which worker
+    // serves it
+    let before = coord.classify(ds.image32(0)).unwrap();
+    let pairs = coord.set_rounding(0.3).unwrap();
+    assert!(pairs > 1000);
+    for _ in 0..8 {
+        let after = coord.classify(ds.image32(0)).unwrap();
+        let diff: f32 = before.iter().zip(&after).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(diff > 1e-6, "a replica is still serving old weights");
+    }
+}
+
+#[test]
+fn missing_artifacts_fail_init_cleanly() {
+    let dir = subaccel::util::TempDir::new().unwrap();
+    let c = ServeConfig { artifacts_dir: dir.path().to_path_buf(), ..Default::default() };
+    match Coordinator::start(c) {
+        Ok(_) => panic!("coordinator started without artifacts"),
+        Err(e) => assert!(format!("{e:#}").contains("weights.bin"), "{e:#}"),
+    }
+}

@@ -1,0 +1,298 @@
+//! Cross-language / cross-layer integration: python-written artifacts →
+//! rust data plane → rust engine → PJRT runtime. These tests close the
+//! loops DESIGN.md §6 promises:
+//!
+//! * rust dense engine ≡ python pure-jnp goldens,
+//! * PJRT XLA-native artifact ≡ goldens,
+//! * PJRT Pallas-kernel artifact ≡ goldens (the paper-integrated path),
+//! * PJRT subconv artifact fed with *rust* Algorithm-1 tables ≡ rust
+//!   subtractor unit (the core contribution, across the language gap),
+//! * modified-weight variants agree across engines.
+//!
+//! All tests skip cleanly when `make artifacts` has not run.
+
+use std::collections::HashMap;
+use std::path::Path;
+use subaccel::accel::LayerPairing;
+use subaccel::data::{load_dataset, load_golden, load_weights};
+use subaccel::nn::lenet5_from_params;
+use subaccel::runtime::{tensor_to_literal, LeNet5Executor, Runtime, Variant};
+use subaccel::tensor::Tensor;
+
+const ART: &str = "artifacts";
+
+fn artifacts_ready() -> bool {
+    let ok = Path::new(ART).join("golden.bin").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn weights() -> HashMap<String, Tensor> {
+    load_weights(Path::new(ART).join("weights.bin")).expect("weights.bin")
+}
+
+/// Max |a−b| over two logit tensors.
+fn max_diff(a: &Tensor, b: &Tensor) -> f32 {
+    a.max_abs_diff(b)
+}
+
+#[test]
+fn rust_engine_matches_python_goldens() {
+    if !artifacts_ready() {
+        return;
+    }
+    let golden = load_golden(Path::new(ART).join("golden.bin")).unwrap();
+    let model = lenet5_from_params(&weights());
+    let n = golden.inputs.shape()[0];
+    let per = 32 * 32;
+    let mut worst = 0f32;
+    for i in 0..n {
+        let img = Tensor::new(&[1, 1, 32, 32], golden.inputs.data()[i * per..(i + 1) * per].to_vec());
+        let logits = model.infer(&img);
+        let want = Tensor::new(&[1, 10], golden.logits.data()[i * 10..(i + 1) * 10].to_vec());
+        worst = worst.max(max_diff(&logits, &want));
+    }
+    assert!(worst < 2e-3, "rust engine vs python goldens: max diff {worst}");
+}
+
+#[test]
+fn golden_loss_curve_is_decreasing() {
+    if !artifacts_ready() {
+        return;
+    }
+    let golden = load_golden(Path::new(ART).join("golden.bin")).unwrap();
+    assert!(golden.loss_curve.len() >= 2, "training recorded {} epochs", golden.loss_curve.len());
+    assert!(
+        golden.loss_curve.last().unwrap() < golden.loss_curve.first().unwrap(),
+        "loss did not decrease: {:?}",
+        golden.loss_curve
+    );
+}
+
+#[test]
+fn pjrt_xla_native_matches_goldens() {
+    if !artifacts_ready() {
+        return;
+    }
+    pjrt_variant_matches_goldens(Variant::XlaNative, 2e-3);
+}
+
+#[test]
+fn pjrt_pallas_matches_goldens() {
+    if !artifacts_ready() {
+        return;
+    }
+    // the Pallas path reorders the contraction (tiled matmul) → same tol
+    pjrt_variant_matches_goldens(Variant::Pallas, 2e-3);
+}
+
+fn pjrt_variant_matches_goldens(variant: Variant, tol: f32) {
+    let golden = load_golden(Path::new(ART).join("golden.bin")).unwrap();
+    let w = weights();
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exe = LeNet5Executor::load(&rt, ART, variant, 8, &w).expect("load artifact");
+    let per = 32 * 32;
+    let n = 8; // one compiled batch
+    let mut batch = Vec::with_capacity(n * per);
+    batch.extend_from_slice(&golden.inputs.data()[..n * per]);
+    let logits = exe.execute(&Tensor::new(&[n, 1, 32, 32], batch)).expect("execute");
+    let want = Tensor::new(&[n, 10], golden.logits.data()[..n * 10].to_vec());
+    let diff = max_diff(&logits, &want);
+    assert!(diff < tol, "{variant:?} vs goldens: max diff {diff}");
+}
+
+#[test]
+fn pjrt_batch_sizes_agree() {
+    if !artifacts_ready() {
+        return;
+    }
+    let w = weights();
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let e1 = LeNet5Executor::load(&rt, ART, Variant::XlaNative, 1, &w).unwrap();
+    let e8 = LeNet5Executor::load(&rt, ART, Variant::XlaNative, 8, &w).unwrap();
+    let batch = ds.batch32(0, 8);
+    let l8 = e8.execute(&batch).unwrap();
+    for i in 0..8 {
+        let img = ds.image32(i);
+        let l1 = e1.execute(&img).unwrap();
+        let row = Tensor::new(&[1, 10], l8.data()[i * 10..(i + 1) * 10].to_vec());
+        let diff = max_diff(&l1, &row);
+        assert!(diff < 1e-4, "batch-1 vs batch-8 disagree at {i}: {diff}");
+    }
+}
+
+#[test]
+fn modified_weight_variant_agrees_across_engines() {
+    if !artifacts_ready() {
+        return;
+    }
+    let base = weights();
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    let rounding = 0.05f32;
+
+    // rust dense engine with modified weights
+    let model = lenet5_from_params(&base);
+    let mut m = model.clone();
+    for info in model.conv_layers(&[1, 1, 32, 32]) {
+        let p = LayerPairing::from_weights(&info.weight, rounding);
+        m.set_conv_weights(&info.name, p.modified_weights(&info.weight));
+    }
+
+    // PJRT executor with install_variant (same preprocessing, same HLO)
+    let rt = Runtime::cpu().unwrap();
+    let mut exe = LeNet5Executor::load(&rt, ART, Variant::XlaNative, 1, &base).unwrap();
+    let pairs = exe.install_variant(&base, rounding).unwrap();
+    assert!(pairs > 0, "headline rounding must find pairs");
+
+    for i in 0..8 {
+        let img = ds.image32(i);
+        let a = m.infer(&img);
+        let b = exe.execute(&img).unwrap();
+        let diff = max_diff(&a, &b);
+        assert!(diff < 2e-3, "engines disagree at img {i}: {diff}");
+    }
+}
+
+/// The deepest cross-language loop: rust Algorithm-1 pairing tables feed
+/// the *python-lowered* subconv HLO (pairing tables are runtime args),
+/// and the result must match the rust subtractor unit bit-for-bit-ish.
+#[test]
+fn pjrt_subconv_artifact_matches_rust_subconv_unit() {
+    if !artifacts_ready() {
+        return;
+    }
+    let base = weights();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load_hlo(Path::new(ART).join("subconv_c3_b1.hlo.txt"))
+        .expect("subconv artifact");
+
+    // layer C3 geometry: input (1, 6, 14, 14), 16 filters of 150 weights
+    let w3 = &base["c3_w"];
+    let b3 = &base["c3_b"];
+    let rounding = 0.05f32;
+    let pairing = LayerPairing::from_weights(w3, rounding);
+
+    // padded tables with the artifact's fixed Pmax=75 / Umax=150
+    let (pmax, umax) = (75usize, 150usize);
+    let cout = 16usize;
+    let mut i1 = vec![0i32; cout * pmax];
+    let mut i2 = vec![0i32; cout * pmax];
+    let mut pk = vec![0f32; cout * pmax];
+    let mut iu = vec![0i32; cout * umax];
+    let mut wu = vec![0f32; cout * umax];
+    for (c, f) in pairing.filters.iter().enumerate() {
+        for j in 0..f.n_pairs() {
+            i1[c * pmax + j] = f.pair_i1[j] as i32;
+            i2[c * pmax + j] = f.pair_i2[j] as i32;
+            pk[c * pmax + j] = f.pair_k[j];
+        }
+        for j in 0..f.n_unpaired() {
+            iu[c * umax + j] = f.unp_idx[j] as i32;
+            wu[c * umax + j] = f.unp_w[j];
+        }
+    }
+
+    // synthetic input through both paths
+    let mut rng = subaccel::util::Rng::seed_from_u64(99);
+    let x = Tensor::new(&[1, 6, 14, 14], rng.vec_range(6 * 14 * 14, -1.0, 1.0));
+
+    let lit = |v: &[f32], shape: &[usize]| {
+        tensor_to_literal(&Tensor::new(shape, v.to_vec())).unwrap()
+    };
+    let ilit = |v: &[i32], shape: &[i64]| {
+        xla::Literal::vec1(v).reshape(shape).unwrap()
+    };
+    let inputs = vec![
+        tensor_to_literal(&x).unwrap(),
+        ilit(&i1, &[16, 75]),
+        ilit(&i2, &[16, 75]),
+        lit(&pk, &[16, 75]),
+        ilit(&iu, &[16, 150]),
+        lit(&wu, &[16, 150]),
+        tensor_to_literal(b3).unwrap(),
+    ];
+    let got = exe.run(&inputs).expect("execute subconv artifact");
+
+    let unit = subaccel::accel::SubConv2d::compile(w3, b3, rounding);
+    let (want, counts) = unit.forward(&x);
+    assert!(counts.subs > 0);
+    assert_eq!(got.shape(), want.shape());
+    let diff = max_diff(&got, &want);
+    assert!(diff < 1e-4, "python-lowered subconv vs rust unit: max diff {diff}");
+}
+
+/// The fully-paired artifact: ALL conv layers run the subtractor datapath
+/// inside the python-lowered HLO, fed with rust Algorithm-1 tables.
+#[test]
+fn fully_paired_artifact_serves_and_matches_engines() {
+    if !artifacts_ready() {
+        return;
+    }
+    let base = weights();
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let rounding = 0.05f32;
+    let exe = subaccel::runtime::PairedLeNet5Executor::load(&rt, ART, 1, &base, rounding)
+        .expect("paired artifact");
+    assert_eq!(exe.pairs_per_layer().len(), 3);
+    assert!(exe.pairs_per_layer().iter().sum::<usize>() > 20_000);
+
+    // oracle: rust dense engine with modified weights
+    let model = lenet5_from_params(&base);
+    let mut m = model.clone();
+    for info in model.conv_layers(&[1, 1, 32, 32]) {
+        let p = LayerPairing::from_weights(&info.weight, rounding);
+        m.set_conv_weights(&info.name, p.modified_weights(&info.weight));
+    }
+    for i in 0..8 {
+        let img = ds.image32(i);
+        let got = exe.execute(&img).unwrap();
+        let want = m.infer(&img);
+        let diff = max_diff(&got, &want);
+        assert!(diff < 2e-3, "paired artifact vs rust engine at {i}: {diff}");
+    }
+}
+
+#[test]
+fn fully_paired_artifact_rounding_zero_matches_original_model() {
+    if !artifacts_ready() {
+        return;
+    }
+    let base = weights();
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exe = subaccel::runtime::PairedLeNet5Executor::load(&rt, ART, 1, &base, 0.0).unwrap();
+    assert_eq!(exe.pairs_per_layer().iter().sum::<usize>(), 0);
+    let model = lenet5_from_params(&base);
+    for i in 0..4 {
+        let img = ds.image32(i);
+        let diff = max_diff(&exe.execute(&img).unwrap(), &model.infer(&img));
+        assert!(diff < 2e-3, "rounding 0 must reproduce the original model: {diff}");
+    }
+}
+
+#[test]
+fn malformed_artifact_is_rejected() {
+    let dir = subaccel::util::TempDir::new().unwrap();
+    std::fs::write(dir.file("bad.hlo.txt"), "this is not HLO").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    assert!(rt.load_hlo(dir.file("bad.hlo.txt")).is_err());
+    assert!(rt.load_hlo(dir.file("missing.hlo.txt")).is_err());
+}
+
+#[test]
+fn executor_rejects_wrong_batch_shape() {
+    if !artifacts_ready() {
+        return;
+    }
+    let w = weights();
+    let rt = Runtime::cpu().unwrap();
+    let exe = LeNet5Executor::load(&rt, ART, Variant::XlaNative, 8, &w).unwrap();
+    let bad = Tensor::zeros(&[4, 1, 32, 32]);
+    let err = exe.execute(&bad).unwrap_err().to_string();
+    assert!(err.contains("compiled for batch"), "{err}");
+}

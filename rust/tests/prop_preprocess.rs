@@ -1,0 +1,177 @@
+//! Property tests over the paper's core invariants (Algorithm 1 + the
+//! subtractor conv unit), using the in-tree `forall` helper.
+
+use subaccel::accel::{pair_filter, LayerPairing, SubConv2d};
+use subaccel::nn::layers::conv2d;
+use subaccel::tensor::Tensor;
+use subaccel::util::{forall, Gen};
+
+const CASES: usize = 200;
+
+fn rand_rounding(g: &mut Gen) -> f32 {
+    // mix zero, tiny, paper-range, and huge roundings
+    match g.rng.below(5) {
+        0 => 0.0,
+        1 => g.rng.range(0.0, 0.01),
+        2 => g.rng.range(0.01, 0.3),
+        3 => g.rng.range(0.3, 2.0),
+        _ => 1e9,
+    }
+}
+
+#[test]
+fn conservation_no_weight_lost_or_duplicated() {
+    forall("conservation", 0xC0DE, CASES, |g| {
+        let w = g.weights(300, 1.0);
+        let r = rand_rounding(g);
+        let p = pair_filter(&w, r);
+        if 2 * p.n_pairs() + p.n_unpaired() != w.len() {
+            return Err(format!("count mismatch: {} pairs, {} unpaired, {} weights", p.n_pairs(), p.n_unpaired(), w.len()));
+        }
+        let mut seen: Vec<u32> = p.pair_i1.iter().chain(&p.pair_i2).chain(&p.unp_idx).copied().collect();
+        seen.sort_unstable();
+        if seen != (0..w.len() as u32).collect::<Vec<_>>() {
+            return Err("indices are not a permutation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pairs_respect_rounding_window_and_signs() {
+    forall("pair-window", 0xBEEF, CASES, |g| {
+        let w = g.weights(300, 1.0);
+        let r = rand_rounding(g);
+        let p = pair_filter(&w, r);
+        for j in 0..p.n_pairs() {
+            let ka = w[p.pair_i1[j] as usize];
+            let kb = w[p.pair_i2[j] as usize];
+            if ka <= 0.0 || kb >= 0.0 {
+                return Err(format!("pair signs wrong: {ka} {kb}"));
+            }
+            if (ka - (-kb)).abs() >= r {
+                return Err(format!("pair outside window: |{ka} - {}| >= {r}", -kb));
+            }
+            let k = p.pair_k[j];
+            if (k - (ka + (-kb)) / 2.0).abs() > 1e-6 {
+                return Err("snap is not the mean magnitude".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snap_error_bounded_by_half_rounding() {
+    forall("snap-bound", 0xF00D, CASES, |g| {
+        let n = 1 + g.rng.below(128);
+        let cout = 1 + g.rng.below(4);
+        let w = Tensor::new(&[cout, n], g.rng.vec_range(cout * n, -1.0, 1.0));
+        let r = g.rng.range(0.0, 0.5);
+        let p = LayerPairing::from_weights(&w, r);
+        let err = p.max_snap_error(&w);
+        if err > r / 2.0 + 1e-6 {
+            return Err(format!("snap error {err} > rounding/2 = {}", r / 2.0));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pair_count_monotone_in_rounding() {
+    forall("monotone", 0xAAAA, 100, |g| {
+        let w = g.weights(200, 1.0);
+        let mut prev = 0usize;
+        for r in [0.0f32, 0.005, 0.02, 0.05, 0.1, 0.3, 1.0, 1e9] {
+            let n = pair_filter(&w, r).n_pairs();
+            if n < prev {
+                return Err(format!("pairs dropped from {prev} to {n} at rounding {r}"));
+            }
+            prev = n;
+        }
+        // at infinite rounding everything pairable is paired
+        let npos = w.iter().filter(|&&v| v > 0.0).count();
+        let nneg = w.iter().filter(|&&v| v < 0.0).count();
+        if prev != npos.min(nneg) {
+            return Err(format!("saturation {prev} != min({npos},{nneg})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn input_order_invariance() {
+    // pairing depends on values, not on storage order: shuffling weights
+    // yields the same multiset of (ka, kb) pairs
+    forall("order-invariance", 0x5EED, 100, |g| {
+        let w = g.weights(100, 1.0);
+        let r = g.rng.range(0.0, 0.3);
+        let mut shuffled_idx: Vec<usize> = (0..w.len()).collect();
+        g.rng.shuffle(&mut shuffled_idx);
+        let ws: Vec<f32> = shuffled_idx.iter().map(|&i| w[i]).collect();
+
+        let key = |w: &[f32], p: &subaccel::accel::FilterPairing| {
+            let mut v: Vec<(u32, u32)> = (0..p.n_pairs())
+                .map(|j| {
+                    (
+                        w[p.pair_i1[j] as usize].to_bits(),
+                        w[p.pair_i2[j] as usize].to_bits(),
+                    )
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        let a = pair_filter(&w, r);
+        let b = pair_filter(&ws, r);
+        if key(&w, &a) != key(&ws, &b) {
+            return Err("pair multiset changed under shuffle".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn subconv_equals_dense_modified_conv() {
+    forall("subconv-equivalence", 0xD1FF, 60, |g| {
+        let cin = 1 + g.rng.below(3);
+        let k = 1 + g.rng.below(4);
+        let extra = g.rng.below(5);
+        let (h, wdt) = (k + extra, k + extra);
+        let cout = 1 + g.rng.below(6);
+        let x = Tensor::new(&[1, cin, h, wdt], g.rng.vec_range(cin * h * wdt, -1.0, 1.0));
+        let w = Tensor::new(&[cout, cin, k, k], g.rng.vec_range(cout * cin * k * k, -1.0, 1.0));
+        let b = Tensor::new(&[cout], g.rng.vec_range(cout, -0.5, 0.5));
+        let r = rand_rounding(g);
+
+        let unit = SubConv2d::compile(&w, &b, r);
+        let (got, counts) = unit.forward(&x);
+        let wmod = unit.pairing().modified_weights(&w);
+        let (want, base) = conv2d(&x, &wmod, &b, 1, 0);
+        let diff = got.max_abs_diff(&want);
+        if diff > 1e-4 {
+            return Err(format!("paired vs dense-modified diff {diff}"));
+        }
+        // Table-1 identity: sub count trades 1:1 against mul and add
+        if counts.muls + counts.subs != base.muls || counts.adds + counts.subs != base.adds {
+            return Err("op identity violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn modified_weights_never_flip_signs() {
+    forall("sign-preservation", 0x5164, 100, |g| {
+        let w = g.weights(150, 1.0);
+        let t = Tensor::new(&[1, w.len()], w.clone());
+        let r = g.rng.range(0.0, 1.0);
+        let m = LayerPairing::from_weights(&t, r).modified_weights(&t);
+        for (a, b) in w.iter().zip(m.data()) {
+            if a.signum() != b.signum() && *a != 0.0 {
+                return Err(format!("sign flip {a} -> {b}"));
+            }
+        }
+        Ok(())
+    });
+}
