@@ -1,11 +1,17 @@
 //! Bench: the convolution hot path across every engine in the stack —
-//! dense rust conv, paired subtractor unit (rust), and the two PJRT
-//! artifacts (Pallas-kernel and XLA-native). This is the §Perf
-//! measurement harness (EXPERIMENTS.md §Perf).
+//! dense rust conv, paired subtractor unit (serial vs the parallel
+//! [`ConvEngine`]), and the two PJRT artifacts (Pallas-kernel and
+//! XLA-native). This is the §Perf measurement harness
+//! (EXPERIMENTS.md §Perf).
+//!
+//! Acceptance gate for the engine: on a multi-core host, N threads must
+//! be ≥1.5× faster than serial on the large batched geometry, never
+//! slower with 1 thread, and outputs must agree within 1e-5 (they are
+//! bit-identical by construction).
 //!
 //! Run: `cargo bench --bench conv_hotpath`
 
-use subaccel::accel::SubConv2d;
+use subaccel::accel::{ConvEngine, SubConv2d};
 use subaccel::data::load_weights;
 use subaccel::nn::layers::conv2d;
 use subaccel::nn::lenet5_from_params;
@@ -28,6 +34,42 @@ fn main() {
         let label = format!("rust subconv c3 r={rounding} ({} pairs)", sc.total_pairs());
         let r = bench(&label, 5, 50, || sc.forward(&x).0.len());
         println!("{}", r.report());
+    }
+
+    // --- serial vs parallel engine (batched) ----------------------------
+    // C3 geometry at batch 8, plus a wider layer where sharding pays.
+    let n_threads = ConvEngine::host_threads();
+    let e1 = ConvEngine::new(1).expect("1-thread engine");
+    let en = ConvEngine::new(n_threads).expect("N-thread engine");
+    println!("\n# packed engine, serial vs 1 thread vs {n_threads} threads");
+    let x8 = Tensor::new(&[8, 6, 14, 14], rng.vec_range(8 * 6 * 14 * 14, -1.0, 1.0));
+    let wide_x = Tensor::new(&[8, 16, 28, 28], rng.vec_range(8 * 16 * 28 * 28, -1.0, 1.0));
+    let wide_w = Tensor::new(&[48, 16, 3, 3], rng.vec_range(48 * 16 * 9, -0.3, 0.3));
+    let wide_b = Tensor::new(&[48], rng.vec_range(48, -0.1, 0.1));
+    for (name, xx, ww, bb, iters) in [
+        ("c3 b8", &x8, &w, &b, 40),
+        ("wide b8", &wide_x, &wide_w, &wide_b, 15),
+    ] {
+        let sc = SubConv2d::compile(ww, bb, 0.05);
+        let serial = bench(&format!("subconv {name} serial"), 3, iters, || sc.forward(xx).0.len());
+        println!("{}", serial.report());
+        let r1 = bench(&format!("subconv {name} engine t=1"), 3, iters, || {
+            sc.forward_with(&e1, xx).unwrap().0.len()
+        });
+        println!("{}", r1.report());
+        let rn = bench(&format!("subconv {name} engine t={n_threads}"), 3, iters, || {
+            sc.forward_with(&en, xx).unwrap().0.len()
+        });
+        println!("{}", rn.report());
+        let speedup = serial.mean.as_secs_f64() / rn.mean.as_secs_f64();
+        println!("  -> {name}: {n_threads}-thread speedup {speedup:.2}x over serial");
+        // correctness gate: all three paths agree within 1e-5
+        let want = sc.forward(xx).0;
+        for (t, eng) in [(1usize, &e1), (n_threads, &en)] {
+            let got = sc.forward_with(eng, xx).unwrap().0;
+            let diff = got.max_abs_diff(&want);
+            assert!(diff <= 1e-5, "engine t={t} diverged from serial: max |Δ| {diff}");
+        }
     }
 
     // --- whole-model paths ----------------------------------------------

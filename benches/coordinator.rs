@@ -1,13 +1,13 @@
 //! Bench: serving-path overhead and throughput — coordinator (dynamic
-//! batching) vs raw executor calls, across batch sizes and offered
-//! concurrency. This quantifies the L3 §Perf target: the coordinator
-//! must not be the bottleneck (<10 % overhead at saturation).
+//! batching) vs raw executor calls, across batch sizes, backends, and
+//! offered concurrency. This quantifies the L3 §Perf target: the
+//! coordinator must not be the bottleneck (<10 % overhead at saturation).
 //!
 //! Run: `cargo bench --bench coordinator`
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use subaccel::coordinator::{Coordinator, ServeConfig};
+use subaccel::coordinator::{Backend, Coordinator, ServeConfig};
 use subaccel::data::{load_dataset, load_weights};
 use subaccel::runtime::{LeNet5Executor, Runtime, Variant};
 
@@ -43,51 +43,57 @@ fn main() {
     }
 
     // --- coordinator under offered load ----------------------------------
-    println!("\n# coordinator (dynamic batching), xla-native artifact");
-    println!(
-        "{:>6} {:>8} {:>10} {:>11} {:>10} {:>10} {:>10}",
-        "batch", "clients", "req/s", "mean_batch", "e2e_p50", "e2e_p99", "exec_mean"
-    );
-    for batch in [8usize, 32] {
-        for clients in [1usize, 8, 64] {
-            let cfg = ServeConfig {
-                artifacts_dir: "artifacts".into(),
-                batch_size: batch,
-                max_wait: Duration::from_millis(2),
-                ..Default::default()
-            };
-            let coord = Arc::new(Coordinator::start(cfg).expect("start"));
-            let per_client = 400 / clients;
-            let t0 = Instant::now();
-            let handles: Vec<_> = (0..clients)
-                .map(|c| {
-                    let coord = coord.clone();
-                    let ds = ds.clone();
-                    std::thread::spawn(move || {
-                        for i in 0..per_client {
-                            let idx = (c * per_client + i) % ds.n;
-                            while coord.classify(ds.image32(idx)).is_err() {
-                                std::thread::sleep(Duration::from_micros(100));
+    for (backend, bname, batches) in [
+        (Backend::Pjrt(Variant::XlaNative), "xla-native", &[8usize, 32][..]),
+        (Backend::CpuEngine, "cpu-engine", &[8usize][..]),
+    ] {
+        println!("\n# coordinator (dynamic batching), {bname} backend");
+        println!(
+            "{:>6} {:>8} {:>10} {:>11} {:>10} {:>10} {:>10}",
+            "batch", "clients", "req/s", "mean_batch", "e2e_p50", "e2e_p99", "exec_mean"
+        );
+        for &batch in batches {
+            for clients in [1usize, 8, 64] {
+                let cfg = ServeConfig::builder()
+                    .artifacts_dir("artifacts")
+                    .backend(backend)
+                    .batch_size(batch)
+                    .max_wait(Duration::from_millis(2))
+                    .build()
+                    .expect("bench config");
+                let coord = Arc::new(Coordinator::start(cfg).expect("start"));
+                let per_client = 400 / clients;
+                let t0 = Instant::now();
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let coord = coord.clone();
+                        let ds = ds.clone();
+                        std::thread::spawn(move || {
+                            for i in 0..per_client {
+                                let idx = (c * per_client + i) % ds.n;
+                                while coord.classify(ds.image32(idx)).is_err() {
+                                    std::thread::sleep(Duration::from_micros(100));
+                                }
                             }
-                        }
+                        })
                     })
-                })
-                .collect();
-            for h in handles {
-                h.join().unwrap();
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                let dt = t0.elapsed();
+                let snap = coord.metrics().snapshot();
+                println!(
+                    "{:>6} {:>8} {:>10.1} {:>11.2} {:>9}µs {:>9}µs {:>9.0}µs",
+                    batch,
+                    clients,
+                    (clients * per_client) as f64 / dt.as_secs_f64(),
+                    snap.mean_batch_size,
+                    snap.e2e.p50_us,
+                    snap.e2e.p99_us,
+                    snap.execute.mean_us,
+                );
             }
-            let dt = t0.elapsed();
-            let m = coord.metrics();
-            println!(
-                "{:>6} {:>8} {:>10.1} {:>11.2} {:>9}µs {:>9}µs {:>9.0}µs",
-                batch,
-                clients,
-                (clients * per_client) as f64 / dt.as_secs_f64(),
-                m.mean_batch_size(),
-                m.e2e_latency.percentile_us(50.0),
-                m.e2e_latency.percentile_us(99.0),
-                m.execute_latency.mean_us(),
-            );
         }
     }
 }

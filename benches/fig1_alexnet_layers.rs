@@ -6,9 +6,14 @@
 //! Run: `cargo bench --bench fig1_alexnet_layers`
 //!
 //! Expected shape (paper): convolutional layers ≈ 90 % of inference time.
+//! A second section times each conv layer on the paired subtractor
+//! engine, serial vs multi-threaded — the layers Fig 1 says dominate are
+//! exactly the ones the engine shards.
 
-use subaccel::nn::alexnet;
+use subaccel::accel::{ConvEngine, SubConv2d};
+use subaccel::nn::{alexnet, LayerKind};
 use subaccel::tensor::Tensor;
+use subaccel::util::{bench, bench_header};
 
 fn main() {
     let m = alexnet();
@@ -52,4 +57,29 @@ fn main() {
         100.0 * conv_t / total_t,
         100.0 * conv_m as f64 / total_m as f64
     );
+
+    // --- the dominant layers on the paired engine, serial vs parallel ----
+    let n_threads = ConvEngine::host_threads();
+    let engine = ConvEngine::new(n_threads).expect("engine");
+    println!("\n# per-conv-layer paired engine (rounding 0.05), serial vs {n_threads} threads");
+    println!("{}", bench_header());
+    let mut h = x.clone();
+    for layer in &m.layers {
+        if let LayerKind::Conv2d { weight, bias, stride, pad } = &layer.kind {
+            let unit = SubConv2d::compile_geo(weight, bias, 0.05, *stride, *pad);
+            let serial = bench(&format!("{} serial", layer.name), 1, 5, || {
+                unit.forward(&h).0.len()
+            });
+            println!("{}", serial.report());
+            let par = bench(&format!("{} engine t={n_threads}", layer.name), 1, 5, || {
+                unit.forward_with(&engine, &h).unwrap().0.len()
+            });
+            println!(
+                "{}  [{:.2}x]",
+                par.report(),
+                serial.mean.as_secs_f64() / par.mean.as_secs_f64()
+            );
+        }
+        h = layer.forward(&h).0;
+    }
 }

@@ -3,18 +3,17 @@
 //! 1. Load the trained LeNet-5 (`artifacts/weights.bin`).
 //! 2. Run Algorithm 1 at rounding 0.05 (the paper's headline point).
 //! 3. Show what it bought: pairs found, op counts, power/area savings.
-//! 4. Classify test images on the *paired subtractor datapath* and on the
+//! 4. Classify test images on the *paired subtractor datapath* (via
+//!    [`PairedModel`] on a multi-threaded [`ConvEngine`]) and on the
 //!    original dense weights, and compare.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`)
 
 use anyhow::{Context, Result};
-use subaccel::accel::{model_ops, LayerPairing, SubConv2d};
+use subaccel::accel::{model_ops, ConvEngine, LayerPairing};
 use subaccel::data::{load_dataset, load_weights};
 use subaccel::hw::{savings_report, CostModel};
-use subaccel::nn::layers::{avgpool2, dense_layer, tanh_inplace};
-use subaccel::nn::lenet5_from_params;
-use subaccel::tensor::Tensor;
+use subaccel::nn::{lenet5_from_params, PairedModel};
 
 const ROUNDING: f32 = 0.05;
 
@@ -26,7 +25,6 @@ fn main() -> Result<()> {
     // --- 2. preprocess -----------------------------------------------------
     println!("== Algorithm 1 at rounding {ROUNDING} ==");
     let infos = model.conv_layers(&[1, 1, 32, 32]);
-    let mut units = Vec::new();
     for info in &infos {
         let pairing = LayerPairing::from_weights(&info.weight, ROUNDING);
         println!(
@@ -37,8 +35,15 @@ fn main() -> Result<()> {
             200.0 * pairing.total_pairs() as f32 / info.weight.len() as f32,
             pairing.max_snap_error(&info.weight),
         );
-        units.push(SubConv2d::compile(&info.weight, &info.bias, ROUNDING));
     }
+    let paired = PairedModel::compile(&model, ROUNDING);
+    let engine = ConvEngine::new(ConvEngine::host_threads())?;
+    println!(
+        "compiled `{}`: {} total pairs, engine threads {}",
+        paired.name(),
+        paired.total_pairs(),
+        engine.threads()
+    );
 
     // --- 3. what it bought ---------------------------------------------------
     let base = model_ops(&model, &[1, 1, 32, 32], 0.0);
@@ -64,7 +69,7 @@ fn main() -> Result<()> {
     for i in 0..n {
         let img = ds.image32(i);
         let dense_pred = model.infer(&img).argmax_rows()[0];
-        let paired_pred = paired_forward(&weights, &units, &img);
+        let paired_pred = paired.infer_with(&engine, &img)?.argmax_rows()[0];
         agree += (dense_pred == paired_pred) as usize;
         hits += (paired_pred == ds.labels[i] as usize) as usize;
         println!(
@@ -74,26 +79,4 @@ fn main() -> Result<()> {
     }
     println!("\npaired accuracy {hits}/{n}; dense/paired agreement {agree}/{n}");
     Ok(())
-}
-
-/// LeNet-5 forward with all conv layers on the subtractor datapath.
-fn paired_forward(
-    weights: &std::collections::HashMap<String, Tensor>,
-    units: &[SubConv2d],
-    x: &Tensor,
-) -> usize {
-    let mut h = x.clone();
-    for (i, unit) in units.iter().enumerate() {
-        let (mut out, _) = unit.forward(&h);
-        tanh_inplace(&mut out);
-        h = out;
-        if i < 2 {
-            h = avgpool2(&h);
-        }
-    }
-    let b = h.shape()[0];
-    h = h.reshape(&[b, 120]);
-    let mut f6 = dense_layer(&h, &weights["f6_w"], &weights["f6_b"]);
-    tanh_inplace(&mut f6);
-    dense_layer(&f6, &weights["out_w"], &weights["out_b"]).argmax_rows()[0]
 }

@@ -17,16 +17,15 @@ const CLIENTS: usize = 16;
 
 fn main() -> Result<()> {
     let ds = Arc::new(load_dataset("artifacts/dataset.bin").context("run `make artifacts`")?);
-    let cfg = ServeConfig {
-        artifacts_dir: "artifacts".into(),
-        variant: Variant::XlaNative,
-        batch_size: 8,
-        max_wait: Duration::from_millis(2),
-        queue_cap: 1024,
-        rounding: 0.0,
-        workers: 1,
-    };
-    println!("starting coordinator (xla-native artifact, batch {})", cfg.batch_size);
+    let cfg = ServeConfig::builder()
+        .artifacts_dir("artifacts")
+        .variant(Variant::XlaNative)
+        .batch_size(8)
+        .max_wait(Duration::from_millis(2))
+        .queue_cap(1024)
+        .workers(1)
+        .build()?;
+    println!("starting coordinator (xla-native artifact, batch {})", cfg.batch_size());
     let coord = Arc::new(Coordinator::start(cfg)?);
 
     // serve the paper's interesting rounding points, switching live
@@ -64,13 +63,17 @@ fn main() -> Result<()> {
             .collect();
         let hits: usize = handles.into_iter().map(|h| h.join().unwrap_or(0)).sum();
         let dt = t0.elapsed();
-        let m = coord.metrics();
+        let snap = coord.metrics().snapshot();
         println!(
             "\nrounding {rounding:<5} ({pairs:>5} pairs): {:>6.1} req/s, accuracy {:>6.2}%",
             REQUESTS as f64 / dt.as_secs_f64(),
             100.0 * hits as f64 / REQUESTS as f64,
         );
-        println!("  {}", m.summary());
+        println!("  {snap}");
+        println!(
+            "  completed {} / rejected {} / mean batch {:.2} / e2e p99 {}us",
+            snap.completed, snap.rejected, snap.mean_batch_size, snap.e2e.p99_us
+        );
     }
 
     match Arc::try_unwrap(coord) {

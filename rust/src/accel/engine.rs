@@ -1,0 +1,572 @@
+//! Parallel execution engine for paired convolution.
+//!
+//! Two ideas, both borrowed from how multiplier-less hardware actually
+//! wins (TMA, arXiv:1909.04551; weight-sharing MAC units,
+//! arXiv:1801.10219): a cache-friendly layout and wide parallelism over
+//! cheap ops.
+//!
+//! * [`PackedPairing`] — a structure-of-arrays view of a
+//!   [`LayerPairing`]: all filters' `(i1, i2, k)` triples and
+//!   `(idx, w)` MAC taps live in five flat arrays with CSR-style
+//!   per-filter offset tables. The hot loop walks contiguous slices
+//!   instead of chasing a `Vec<FilterPairing>` of small heap blocks.
+//! * [`ConvEngine`] — a persistent std-thread worker pool (the vendored
+//!   set has no async runtime; this matches the coordinator's
+//!   thread+channel design) that shards im2col rows across cores. The
+//!   engine owns reusable scratch buffers, so a steady-state
+//!   [`ConvEngine::forward_packed_into`] call performs **zero heap
+//!   allocation**.
+//!
+//! Numerics: every shard runs the same [`compute_rows`] kernel in the
+//! same iteration order, and Rust f32 arithmetic is strict — so the
+//! multi-threaded result is **bit-identical** to the serial one (and to
+//! `SubConv2d::forward`, which delegates here). Property-tested in
+//! `rust/tests/prop_engine.rs`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use super::preprocess::{FilterPairing, LayerPairing};
+use crate::error::SubaccelError;
+use crate::nn::OpCounts;
+use crate::tensor::{im2col_into, Tensor};
+
+/// Spatial geometry of a conv layer (everything [`ConvEngine`] needs
+/// beyond the pairing itself).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeometry {
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeometry {
+    /// Valid convolution, stride 1 (LeNet geometry).
+    pub fn valid(kh: usize, kw: usize) -> Self {
+        Self { kh, kw, stride: 1, pad: 0 }
+    }
+}
+
+/// Output geometry of one engine forward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvOutShape {
+    pub batch: usize,
+    pub cout: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+impl ConvOutShape {
+    pub fn dims(&self) -> [usize; 4] {
+        [self.batch, self.cout, self.out_h, self.out_w]
+    }
+}
+
+/// Structure-of-arrays layout of a whole layer's pairing.
+///
+/// Filter `c`'s subtractor triples are
+/// `pair_i1/pair_i2/pair_k[pair_off[c] .. pair_off[c+1]]`, its MAC taps
+/// `unp_idx/unp_w[unp_off[c] .. unp_off[c+1]]`. Built once at compile
+/// time ([`PackedPairing::from_layer`]); round-trips losslessly
+/// ([`PackedPairing::to_layer`]).
+#[derive(Debug, Clone)]
+pub struct PackedPairing {
+    cout: usize,
+    k_len: usize,
+    shape: Vec<usize>,
+    rounding: f32,
+    pair_i1: Vec<u32>,
+    pair_i2: Vec<u32>,
+    pair_k: Vec<f32>,
+    unp_idx: Vec<u32>,
+    unp_w: Vec<f32>,
+    /// `cout + 1` offsets into the pair arrays.
+    pair_off: Vec<u32>,
+    /// `cout + 1` offsets into the unpaired arrays.
+    unp_off: Vec<u32>,
+}
+
+impl PackedPairing {
+    /// Flatten a [`LayerPairing`] into the packed layout.
+    pub fn from_layer(lp: &LayerPairing) -> Self {
+        let cout = lp.filters.len();
+        let n_pairs: usize = lp.filters.iter().map(|f| f.n_pairs()).sum();
+        let n_unp: usize = lp.filters.iter().map(|f| f.n_unpaired()).sum();
+        let mut p = Self {
+            cout,
+            k_len: lp.k_len,
+            shape: lp.shape.clone(),
+            rounding: lp.rounding,
+            pair_i1: Vec::with_capacity(n_pairs),
+            pair_i2: Vec::with_capacity(n_pairs),
+            pair_k: Vec::with_capacity(n_pairs),
+            unp_idx: Vec::with_capacity(n_unp),
+            unp_w: Vec::with_capacity(n_unp),
+            pair_off: Vec::with_capacity(cout + 1),
+            unp_off: Vec::with_capacity(cout + 1),
+        };
+        p.pair_off.push(0);
+        p.unp_off.push(0);
+        for f in &lp.filters {
+            p.pair_i1.extend_from_slice(&f.pair_i1);
+            p.pair_i2.extend_from_slice(&f.pair_i2);
+            p.pair_k.extend_from_slice(&f.pair_k);
+            p.unp_idx.extend_from_slice(&f.unp_idx);
+            p.unp_w.extend_from_slice(&f.unp_w);
+            p.pair_off.push(p.pair_k.len() as u32);
+            p.unp_off.push(p.unp_w.len() as u32);
+        }
+        p
+    }
+
+    /// Reconstruct the per-filter representation (lossless inverse of
+    /// [`PackedPairing::from_layer`]).
+    pub fn to_layer(&self) -> LayerPairing {
+        let filters = (0..self.cout)
+            .map(|c| {
+                let (i1, i2, k) = self.pairs(c);
+                let (ui, uw) = self.unpaired(c);
+                FilterPairing {
+                    pair_i1: i1.to_vec(),
+                    pair_i2: i2.to_vec(),
+                    pair_k: k.to_vec(),
+                    unp_idx: ui.to_vec(),
+                    unp_w: uw.to_vec(),
+                }
+            })
+            .collect();
+        LayerPairing {
+            filters,
+            k_len: self.k_len,
+            shape: self.shape.clone(),
+            rounding: self.rounding,
+        }
+    }
+
+    /// Filter `c`'s subtractor triples `(i1, i2, k)`.
+    #[inline]
+    pub fn pairs(&self, c: usize) -> (&[u32], &[u32], &[f32]) {
+        let (a, b) = (self.pair_off[c] as usize, self.pair_off[c + 1] as usize);
+        (&self.pair_i1[a..b], &self.pair_i2[a..b], &self.pair_k[a..b])
+    }
+
+    /// Filter `c`'s ordinary MAC taps `(idx, w)`.
+    #[inline]
+    pub fn unpaired(&self, c: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.unp_off[c] as usize, self.unp_off[c + 1] as usize);
+        (&self.unp_idx[a..b], &self.unp_w[a..b])
+    }
+
+    pub fn cout(&self) -> usize {
+        self.cout
+    }
+
+    /// Flattened filter length `Cin·kh·kw`.
+    pub fn k_len(&self) -> usize {
+        self.k_len
+    }
+
+    /// Original OIHW weight shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rounding(&self) -> f32 {
+        self.rounding
+    }
+
+    pub fn total_pairs(&self) -> usize {
+        self.pair_k.len()
+    }
+
+    pub fn total_unpaired(&self) -> usize {
+        self.unp_w.len()
+    }
+}
+
+/// One worker's slice of a forward: raw views into the engine's scratch
+/// buffers plus the caller's pairing/bias. Sound because the dispatching
+/// thread holds the engine lock and blocks on the done channel until
+/// every shard is finished, and shards write disjoint `out` regions
+/// carved with `split_at_mut`.
+struct Shard {
+    patches: *const f32,
+    patches_len: usize,
+    out: *mut f32,
+    out_len: usize,
+    packed: *const PackedPairing,
+    bias: *const f32,
+    bias_len: usize,
+    k: usize,
+}
+
+// Raw pointers strip auto-Send; the dispatch protocol above restores the
+// guarantee (exclusive disjoint writes, caller outlives the shard).
+unsafe impl Send for Shard {}
+
+struct Pool {
+    job_txs: Vec<Sender<Shard>>,
+    done_rx: Receiver<()>,
+}
+
+struct Scratch {
+    patches: Vec<f32>,
+    rowmajor: Vec<f32>,
+}
+
+struct Inner {
+    scratch: Scratch,
+    pool: Option<Pool>,
+}
+
+/// Multi-threaded paired-conv executor with persistent workers and
+/// reusable scratch. Cheap to share (`Arc<ConvEngine>`); one engine per
+/// coordinator replica is the intended granularity.
+///
+/// `Sync` by construction: all mutable state (scratch and the pool's
+/// `mpsc` endpoints, which are `!Sync`) sits behind one internal mutex,
+/// so concurrent `forward_*` calls serialize rather than race.
+pub struct ConvEngine {
+    threads: usize,
+    inner: Mutex<Inner>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ConvEngine {
+    /// Build an engine running on `threads` OS threads total (the
+    /// calling thread counts as one; `threads - 1` workers are spawned).
+    pub fn new(threads: usize) -> Result<Self, SubaccelError> {
+        if threads == 0 {
+            return Err(SubaccelError::InvalidConfig {
+                field: "threads",
+                reason: "engine needs at least one thread".into(),
+            });
+        }
+        let scratch = Scratch { patches: Vec::new(), rowmajor: Vec::new() };
+        let (pool, handles) = if threads == 1 {
+            (None, Vec::new())
+        } else {
+            let (done_tx, done_rx) = channel();
+            let mut job_txs = Vec::with_capacity(threads - 1);
+            let mut handles = Vec::with_capacity(threads - 1);
+            for i in 0..threads - 1 {
+                let (tx, rx) = channel::<Shard>();
+                let done = done_tx.clone();
+                let h = std::thread::Builder::new()
+                    .name(format!("conv-engine-{i}"))
+                    .spawn(move || worker_loop(rx, done))
+                    .map_err(|e| SubaccelError::InvalidConfig {
+                        field: "threads",
+                        reason: format!("failed to spawn worker: {e}"),
+                    })?;
+                job_txs.push(tx);
+                handles.push(h);
+            }
+            (Some(Pool { job_txs, done_rx }), handles)
+        };
+        Ok(Self { threads, inner: Mutex::new(Inner { scratch, pool }), handles })
+    }
+
+    /// Single-threaded engine (no workers; runs inline on the caller).
+    pub fn serial() -> Self {
+        Self::new(1).expect("1 thread is always valid")
+    }
+
+    /// Number of OS threads this engine computes on.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Detected host parallelism (≥ 1), for `--threads 0`-style auto
+    /// configuration.
+    pub fn host_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Run a paired conv layer, allocating the output tensor.
+    pub fn forward_packed(
+        &self,
+        packed: &PackedPairing,
+        bias: &Tensor,
+        geo: ConvGeometry,
+        x: &Tensor,
+    ) -> Result<(Tensor, OpCounts), SubaccelError> {
+        let mut buf = Vec::new();
+        let (os, counts) = self.forward_packed_into(packed, bias.data(), geo, x, &mut buf)?;
+        Ok((Tensor::new(&os.dims(), buf), counts))
+    }
+
+    /// Run a paired conv layer into a caller-owned buffer (resized and
+    /// fully overwritten). With a warm buffer this path performs zero
+    /// heap allocation: im2col patches and the row-major intermediate
+    /// live in engine scratch reused across calls.
+    ///
+    /// Errors with [`SubaccelError::KernelMismatch`] when the input's
+    /// per-patch length differs from what the pairing was compiled for;
+    /// non-NCHW inputs and bias-length mismatches are programming errors
+    /// and panic (matching the crate's assert conventions).
+    pub fn forward_packed_into(
+        &self,
+        packed: &PackedPairing,
+        bias: &[f32],
+        geo: ConvGeometry,
+        x: &Tensor,
+        out: &mut Vec<f32>,
+    ) -> Result<(ConvOutShape, OpCounts), SubaccelError> {
+        assert_eq!(bias.len(), packed.cout, "bias length != Cout");
+        let inner = &mut *self.inner.lock().expect("engine lock");
+        let Inner { scratch, pool } = inner;
+
+        let s = im2col_into(x, geo.kh, geo.kw, geo.stride, geo.pad, &mut scratch.patches);
+        if s.k != packed.k_len {
+            return Err(SubaccelError::KernelMismatch {
+                expected_k: packed.k_len,
+                got_k: s.k,
+            });
+        }
+        let (rows, cout) = (s.rows, packed.cout);
+        scratch.rowmajor.resize(rows * cout, 0.0);
+
+        match pool {
+            None => compute_rows(
+                &scratch.patches[..rows * s.k],
+                s.k,
+                packed,
+                bias,
+                &mut scratch.rowmajor[..],
+            ),
+            Some(pool) => {
+                let chunk = (rows + self.threads - 1) / self.threads;
+                let mut rest_out: &mut [f32] = &mut scratch.rowmajor[..];
+                let mut rest_p: &[f32] = &scratch.patches[..rows * s.k];
+
+                // shard 0 stays on the calling thread
+                let take0 = chunk.min(rows);
+                let (out0, r) = std::mem::take(&mut rest_out).split_at_mut(take0 * cout);
+                rest_out = r;
+                let (p0, rp) = rest_p.split_at(take0 * s.k);
+                rest_p = rp;
+
+                // remaining shards go to the workers (≤ threads − 1 of
+                // them, since chunk = ⌈rows / threads⌉)
+                let mut off = take0;
+                let mut sent = 0usize;
+                while off < rows {
+                    let take = chunk.min(rows - off);
+                    let (o, r) = std::mem::take(&mut rest_out).split_at_mut(take * cout);
+                    rest_out = r;
+                    let (p, rp) = rest_p.split_at(take * s.k);
+                    rest_p = rp;
+                    let shard = Shard {
+                        patches: p.as_ptr(),
+                        patches_len: p.len(),
+                        out: o.as_mut_ptr(),
+                        out_len: o.len(),
+                        packed: packed as *const PackedPairing,
+                        bias: bias.as_ptr(),
+                        bias_len: bias.len(),
+                        k: s.k,
+                    };
+                    pool.job_txs[sent].send(shard).expect("conv-engine worker died");
+                    sent += 1;
+                    off += take;
+                }
+                compute_rows(p0, s.k, packed, bias, out0);
+                for _ in 0..sent {
+                    pool.done_rx.recv().expect("conv-engine worker died");
+                }
+            }
+        }
+
+        // (rows, Cout) → (B, Cout, OH, OW)
+        let (b, oh, ow) = (s.batch, s.out_h, s.out_w);
+        out.resize(rows * cout, 0.0);
+        for bi in 0..b {
+            for y in 0..oh {
+                for xw in 0..ow {
+                    let r = (bi * oh + y) * ow + xw;
+                    for c in 0..cout {
+                        out[((bi * cout + c) * oh + y) * ow + xw] =
+                            scratch.rowmajor[r * cout + c];
+                    }
+                }
+            }
+        }
+
+        let counts = OpCounts::paired_layer(
+            packed.total_pairs() as u64,
+            packed.total_unpaired() as u64,
+            rows as u64,
+            (rows * cout) as u64,
+        );
+        Ok((ConvOutShape { batch: b, cout, out_h: oh, out_w: ow }, counts))
+    }
+}
+
+impl Drop for ConvEngine {
+    fn drop(&mut self) {
+        // Dropping the senders ends each worker's recv loop.
+        if let Ok(mut g) = self.inner.lock() {
+            g.pool = None;
+        }
+        for h in std::mem::take(&mut self.handles) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Shard>, done: Sender<()>) {
+    while let Ok(shard) = rx.recv() {
+        // Safety: the dispatcher holds the engine lock and blocks until
+        // our done token arrives, so these views outlive this block; the
+        // out region is exclusively ours (split_at_mut).
+        unsafe {
+            let patches = std::slice::from_raw_parts(shard.patches, shard.patches_len);
+            let out = std::slice::from_raw_parts_mut(shard.out, shard.out_len);
+            let bias = std::slice::from_raw_parts(shard.bias, shard.bias_len);
+            compute_rows(patches, shard.k, &*shard.packed, bias, out);
+        }
+        if done.send(()).is_err() {
+            break;
+        }
+    }
+}
+
+/// The shared kernel: paired conv over a contiguous block of im2col
+/// rows. Every path through the engine — serial, caller shard, worker
+/// shard — runs exactly this code in exactly this order, which is what
+/// makes thread counts bit-identical (strict f32 + fixed summation
+/// order). The zip/sum shapes mirror the original `SubConv2d` hot loop,
+/// preserving its numerics; the slices now come from the packed layout,
+/// so the filter walk is contiguous.
+fn compute_rows(patches: &[f32], k: usize, packed: &PackedPairing, bias: &[f32], out: &mut [f32]) {
+    let cout = packed.cout;
+    let rows = out.len() / cout;
+    for r in 0..rows {
+        let patch = &patches[r * k..(r + 1) * k];
+        for c in 0..cout {
+            // subtractor lane: k·(I1 − I2) per combined pair
+            let (i1, i2, kk) = packed.pairs(c);
+            let pair_acc: f32 = i1
+                .iter()
+                .zip(i2)
+                .zip(kk)
+                .map(|((&a, &b), &kv)| kv * (patch[a as usize] - patch[b as usize]))
+                .sum();
+            // ordinary MAC lane
+            let (ui, uw) = packed.unpaired(c);
+            let mac_acc: f32 =
+                ui.iter().zip(uw).map(|(&iu, &wv)| wv * patch[iu as usize]).sum();
+            out[r * cout + c] = bias[c] + pair_acc + mac_acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+    }
+
+    #[test]
+    fn zero_threads_is_a_typed_config_error() {
+        match ConvEngine::new(0) {
+            Err(SubaccelError::InvalidConfig { field, .. }) => assert_eq!(field, "threads"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn packed_offsets_are_consistent() {
+        let mut rng = Rng::seed_from_u64(21);
+        let w = rand_t(&mut rng, &[5, 3, 4, 4]);
+        let lp = LayerPairing::from_weights(&w, 0.1);
+        let p = PackedPairing::from_layer(&lp);
+        assert_eq!(p.cout(), 5);
+        assert_eq!(p.k_len(), 48);
+        assert_eq!(p.total_pairs(), lp.total_pairs());
+        for (c, f) in lp.filters.iter().enumerate() {
+            let (i1, i2, k) = p.pairs(c);
+            assert_eq!(i1, &f.pair_i1[..]);
+            assert_eq!(i2, &f.pair_i2[..]);
+            assert_eq!(k, &f.pair_k[..]);
+            let (ui, uw) = p.unpaired(c);
+            assert_eq!(ui, &f.unp_idx[..]);
+            assert_eq!(uw, &f.unp_w[..]);
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_bit_identical() {
+        let mut rng = Rng::seed_from_u64(7);
+        let x = rand_t(&mut rng, &[2, 3, 11, 11]);
+        let w = rand_t(&mut rng, &[6, 3, 3, 3]);
+        let b = rand_t(&mut rng, &[6]);
+        let lp = LayerPairing::from_weights(&w, 0.08);
+        let p = PackedPairing::from_layer(&lp);
+        let geo = ConvGeometry::valid(3, 3);
+
+        let serial = ConvEngine::serial();
+        let (want, want_counts) = serial.forward_packed(&p, &b, geo, &x).unwrap();
+        for threads in 2..=4 {
+            let eng = ConvEngine::new(threads).unwrap();
+            let (got, counts) = eng.forward_packed(&p, &b, geo, &x).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            assert_eq!(got.data(), want.data(), "{threads} threads diverged");
+            assert_eq!(counts, want_counts);
+        }
+    }
+
+    #[test]
+    fn strided_padded_geometry_runs() {
+        let mut rng = Rng::seed_from_u64(13);
+        let x = rand_t(&mut rng, &[1, 3, 16, 16]);
+        let w = rand_t(&mut rng, &[4, 3, 5, 5]);
+        let b = rand_t(&mut rng, &[4]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.05));
+        let eng = ConvEngine::new(3).unwrap();
+        let geo = ConvGeometry { kh: 5, kw: 5, stride: 2, pad: 2 };
+        let (y, _) = eng.forward_packed(&p, &b, geo, &x).unwrap();
+        assert_eq!(y.shape(), &[1, 4, 8, 8]);
+        // matches the serial engine bit-for-bit on the same geometry
+        let (y1, _) = ConvEngine::serial().forward_packed(&p, &b, geo, &x).unwrap();
+        assert_eq!(y.data(), y1.data());
+    }
+
+    #[test]
+    fn kernel_mismatch_is_typed() {
+        let mut rng = Rng::seed_from_u64(3);
+        let w = rand_t(&mut rng, &[2, 2, 3, 3]);
+        let b = Tensor::zeros(&[2]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.0));
+        let x = rand_t(&mut rng, &[1, 3, 8, 8]); // 3 channels ≠ 2
+        let err = ConvEngine::serial()
+            .forward_packed(&p, &b, ConvGeometry::valid(3, 3), &x)
+            .unwrap_err();
+        assert_eq!(err, SubaccelError::KernelMismatch { expected_k: 18, got_k: 27 });
+    }
+
+    #[test]
+    fn reused_buffer_is_fully_overwritten() {
+        let mut rng = Rng::seed_from_u64(31);
+        let w = rand_t(&mut rng, &[3, 2, 3, 3]);
+        let b = rand_t(&mut rng, &[3]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.1));
+        let eng = ConvEngine::new(2).unwrap();
+        let geo = ConvGeometry::valid(3, 3);
+        let big = rand_t(&mut rng, &[2, 2, 10, 10]);
+        let small = rand_t(&mut rng, &[1, 2, 5, 5]);
+        let mut buf = Vec::new();
+        eng.forward_packed_into(&p, b.data(), geo, &big, &mut buf).unwrap();
+        let (os, _) = eng.forward_packed_into(&p, b.data(), geo, &small, &mut buf).unwrap();
+        assert_eq!(buf.len(), os.dims().iter().product::<usize>());
+        let (fresh, _) = eng.forward_packed(&p, &b, geo, &small).unwrap();
+        assert_eq!(&buf[..], fresh.data());
+    }
+}

@@ -8,17 +8,23 @@
 //!   combined weights go through the subtractor lane (`k·(I1−I2)`),
 //!   uncombined weights through the ordinary MAC lane. Numerically
 //!   identical to dense conv with modified weights (unit + prop tested).
+//! * [`engine`] — the execution engine behind [`subconv`]: the
+//!   structure-of-arrays [`PackedPairing`] layout and the multi-threaded
+//!   [`ConvEngine`] worker pool with reusable scratch (zero steady-state
+//!   allocation; bit-identical across thread counts).
 //! * [`opcount`] — Table-1 accounting over a whole model for a rounding
 //!   sweep.
 //! * [`stats`] — weight-distribution statistics (Fig 3 / Fig 4).
 
 mod ablation;
+mod engine;
 mod opcount;
 mod preprocess;
 mod stats;
 mod subconv;
 
 pub use ablation::{pair_filter_closest_first, total_snap_error};
+pub use engine::{ConvEngine, ConvGeometry, ConvOutShape, PackedPairing};
 pub use opcount::{model_op_sweep, model_ops, ModelOps, TABLE1_ROUNDINGS};
 pub use preprocess::{pair_filter, FilterPairing, LayerPairing, WeightClass};
 pub use stats::{histogram, Histogram, WeightStats};

@@ -7,46 +7,86 @@
 //! result; numerics are identical to dense conv with the snapped weights
 //! (verified against [`crate::nn::layers::conv2d`] in tests and against
 //! the Pallas artifact in the integration suite).
+//!
+//! Execution is delegated to [`ConvEngine`]: a compiled layer carries a
+//! [`PackedPairing`] (structure-of-arrays layout, built once), and
+//! [`SubConv2d::forward`] runs it on a process-wide serial engine.
+//! Callers that want multi-core or buffer reuse pass their own engine
+//! via [`SubConv2d::forward_with`].
 
+use std::sync::OnceLock;
+
+use super::engine::{ConvEngine, ConvGeometry, PackedPairing};
 use super::preprocess::LayerPairing;
+use crate::error::SubaccelError;
 use crate::nn::OpCounts;
-use crate::tensor::{im2col, Tensor};
+use crate::tensor::Tensor;
 
 /// A conv layer compiled to the subtractor representation.
 #[derive(Debug, Clone)]
 pub struct SubConv2d {
     pairing: LayerPairing,
+    packed: PackedPairing,
     bias: Tensor,
-    kh: usize,
-    kw: usize,
-    cout: usize,
+    geo: ConvGeometry,
+}
+
+/// Process-wide single-threaded engine backing the plain
+/// [`SubConv2d::forward`], so the historical no-handle API keeps
+/// working without per-call engine setup.
+fn serial_engine() -> &'static ConvEngine {
+    static ENGINE: OnceLock<ConvEngine> = OnceLock::new();
+    ENGINE.get_or_init(ConvEngine::serial)
 }
 
 impl SubConv2d {
     /// Preprocess a dense conv layer (`weight (Cout, Cin, kh, kw)`,
-    /// `bias (Cout,)`) at the given rounding size.
+    /// `bias (Cout,)`) at the given rounding size. Valid conv, stride 1.
     pub fn compile(weight: &Tensor, bias: &Tensor, rounding: f32) -> Self {
+        Self::compile_geo(weight, bias, rounding, 1, 0)
+    }
+
+    /// [`SubConv2d::compile`] with explicit stride / zero padding
+    /// (AlexNet-style geometries).
+    pub fn compile_geo(
+        weight: &Tensor,
+        bias: &Tensor,
+        rounding: f32,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
         assert_eq!(weight.ndim(), 4, "conv weight must be OIHW");
         let cout = weight.shape()[0];
         assert_eq!(bias.len(), cout, "bias length");
-        Self {
-            pairing: LayerPairing::from_weights(weight, rounding),
-            bias: bias.clone(),
-            kh: weight.shape()[2],
-            kw: weight.shape()[3],
-            cout,
-        }
+        let pairing = LayerPairing::from_weights(weight, rounding);
+        let packed = PackedPairing::from_layer(&pairing);
+        let geo =
+            ConvGeometry { kh: weight.shape()[2], kw: weight.shape()[3], stride, pad };
+        Self { pairing, packed, bias: bias.clone(), geo }
     }
 
     /// Wrap an existing pairing (e.g. deserialized from disk).
     pub fn from_pairing(pairing: LayerPairing, bias: Tensor) -> Self {
-        let cout = pairing.shape[0];
         let (kh, kw) = (pairing.shape[2], pairing.shape[3]);
-        Self { pairing, bias, kh, kw, cout }
+        let packed = PackedPairing::from_layer(&pairing);
+        Self { pairing, packed, bias, geo: ConvGeometry::valid(kh, kw) }
     }
 
     pub fn pairing(&self) -> &LayerPairing {
         &self.pairing
+    }
+
+    /// The packed (structure-of-arrays) pairing the engine executes.
+    pub fn packed(&self) -> &PackedPairing {
+        &self.packed
+    }
+
+    pub fn geometry(&self) -> ConvGeometry {
+        self.geo
+    }
+
+    pub fn bias(&self) -> &Tensor {
+        &self.bias
     }
 
     /// Total combined pairs across filters.
@@ -54,71 +94,27 @@ impl SubConv2d {
         self.pairing.total_pairs()
     }
 
-    /// Run the layer on an NCHW input (valid, stride 1 — LeNet geometry).
-    ///
-    /// Hot path layout: one im2col per layer, then per output position the
-    /// pair lane walks `(i1, i2, k)` triples and the MAC lane walks
-    /// `(idx, w)` pairs — exactly the schedule the PE array in
-    /// [`crate::hw::pe`] models.
+    /// Run the layer on an NCHW input using the process-wide serial
+    /// engine. Panics on shape mismatch (historical API; use
+    /// [`SubConv2d::try_forward`] or [`SubConv2d::forward_with`] for
+    /// typed errors).
     pub fn forward(&self, x: &Tensor) -> (Tensor, OpCounts) {
-        let ic = im2col(x, self.kh, self.kw);
-        let rows = ic.patches.shape()[0];
-        let k = ic.k;
-        assert_eq!(k, self.pairing.k_len, "input channels/kernel mismatch");
-        let mut out = vec![0f32; rows * self.cout];
-        let patches = ic.patches.data();
+        self.try_forward(x).expect("input channels/kernel mismatch")
+    }
 
-        // Loop order: rows outer, filters inner (§Perf iteration 3) — each
-        // patch is loaded once and stays in L1 across all 16–120 filters.
-        for r in 0..rows {
-            let patch = &patches[r * k..(r + 1) * k];
-            for (c, f) in self.pairing.filters.iter().enumerate() {
-                let bias = self.bias.data()[c];
-                // subtractor lane: zipped triples avoid per-element bounds
-                // checks on the pairing arrays (§Perf iteration 2)
-                let pair_acc: f32 = f
-                    .pair_i1
-                    .iter()
-                    .zip(&f.pair_i2)
-                    .zip(&f.pair_k)
-                    .map(|((&i1, &i2), &kv)| kv * (patch[i1 as usize] - patch[i2 as usize]))
-                    .sum();
-                // ordinary MAC lane
-                let mac_acc: f32 = f
-                    .unp_idx
-                    .iter()
-                    .zip(&f.unp_w)
-                    .map(|(&iu, &wv)| wv * patch[iu as usize])
-                    .sum();
-                out[r * self.cout + c] = bias + pair_acc + mac_acc;
-            }
-        }
+    /// [`SubConv2d::forward`] with a typed error instead of a panic.
+    pub fn try_forward(&self, x: &Tensor) -> Result<(Tensor, OpCounts), SubaccelError> {
+        self.forward_with(serial_engine(), x)
+    }
 
-        // (rows, Cout) → (B, Cout, OH, OW)
-        let (b, oh, ow) = (ic.batch, ic.out_h, ic.out_w);
-        let mut nchw = vec![0f32; out.len()];
-        for bi in 0..b {
-            for y in 0..oh {
-                for xw in 0..ow {
-                    let r = (bi * oh + y) * ow + xw;
-                    for c in 0..self.cout {
-                        nchw[((bi * self.cout + c) * oh + y) * ow + xw] =
-                            out[r * self.cout + c];
-                    }
-                }
-            }
-        }
-
-        let pairs: u64 = self.pairing.total_pairs() as u64;
-        let unpaired: u64 =
-            self.pairing.filters.iter().map(|f| f.n_unpaired() as u64).sum();
-        let counts = OpCounts::paired_layer(
-            pairs,
-            unpaired,
-            (b * oh * ow) as u64,
-            (b * oh * ow * self.cout) as u64,
-        );
-        (Tensor::new(&[b, self.cout, oh, ow], nchw), counts)
+    /// Run the layer on the given engine (multi-core and scratch reuse
+    /// are the engine's business).
+    pub fn forward_with(
+        &self,
+        engine: &ConvEngine,
+        x: &Tensor,
+    ) -> Result<(Tensor, OpCounts), SubaccelError> {
+        engine.forward_packed(&self.packed, &self.bias, self.geo, x)
     }
 }
 
@@ -202,5 +198,31 @@ mod tests {
         let half = yb.len() / 2;
         assert_eq!(&yb.data()[..half], y0.data());
         assert_eq!(&yb.data()[half..], y1.data());
+    }
+
+    #[test]
+    fn strided_padded_matches_dense_modified() {
+        let mut rng = Rng::seed_from_u64(17);
+        let x = rand_t(&mut rng, &[1, 3, 15, 15]);
+        let w = rand_t(&mut rng, &[4, 3, 5, 5]);
+        let b = rand_t(&mut rng, &[4]);
+        let sc = SubConv2d::compile_geo(&w, &b, 0.1, 2, 2);
+        let (got, _) = sc.forward(&x);
+        let wmod = sc.pairing().modified_weights(&w);
+        let (want, _) = conv2d(&x, &wmod, &b, 2, 2);
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.max_abs_diff(&want) < 1e-5, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn try_forward_surfaces_typed_mismatch() {
+        let mut rng = Rng::seed_from_u64(23);
+        let w = rand_t(&mut rng, &[2, 2, 3, 3]);
+        let sc = SubConv2d::compile(&w, &Tensor::zeros(&[2]), 0.0);
+        let bad = rand_t(&mut rng, &[1, 3, 8, 8]);
+        match sc.try_forward(&bad) {
+            Err(SubaccelError::KernelMismatch { expected_k: 18, got_k: 27 }) => {}
+            other => panic!("expected KernelMismatch, got {other:?}"),
+        }
     }
 }

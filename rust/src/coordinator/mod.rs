@@ -9,17 +9,24 @@
 //!    oneshot ◀──────┴──────── replies ◀─┴─────────────┘
 //! ```
 //!
-//! * The batcher groups requests up to the artifact's compiled batch size
-//!   or a deadline (`max_wait`), padding partial batches — classic
-//!   dynamic batching.
-//! * The PJRT client is not `Send`/`Sync`, so the executor lives on one
-//!   dedicated worker thread; batches cross via a channel (actor pattern).
-//! * Rounding variants are installed by swapping cached weight literals —
-//!   the artifact takes weights as arguments, so variant switches never
-//!   recompile.
+//! * The batcher groups requests up to the configured batch size or a
+//!   deadline (`max_wait`), padding partial batches — classic dynamic
+//!   batching.
+//! * Each replica owns its executor on a dedicated worker thread. With
+//!   [`Backend::Pjrt`] that is a compiled artifact (the PJRT client is
+//!   not `Send`/`Sync` — actor pattern); with [`Backend::CpuEngine`] it
+//!   is a [`crate::runtime::PairedCpuLeNet5`] running on its own
+//!   multi-threaded [`crate::accel::ConvEngine`].
+//! * Rounding variants are installed by swapping cached weight literals
+//!   (PJRT) or recompiling the packed pairing (CPU) — never recompiling
+//!   the artifact.
+//! * Configuration is built via the validating
+//!   [`ServeConfig::builder`]; intake errors
+//!   ([`Coordinator::submit`]) are typed
+//!   [`crate::error::SubaccelError`] values.
 
 mod batcher;
 mod server;
 
 pub use batcher::{BatchPlan, Batcher};
-pub use server::{Coordinator, ServeConfig};
+pub use server::{Backend, Coordinator, LogitsRx, ServeConfig, ServeConfigBuilder};

@@ -1,56 +1,216 @@
 //! The coordinator proper: request intake, dynamic batching, the executor
-//! actor thread, variant management, and metrics.
+//! worker threads, variant management, and metrics.
 //!
 //! Built on std threads + channels (the offline vendor set has no async
 //! runtime): a bounded `sync_channel` provides backpressure at intake, a
-//! batcher thread implements the size-or-deadline policy, and the PJRT
-//! executor (not `Send`) lives on its own actor thread.
+//! batcher thread implements the size-or-deadline policy, and each
+//! executor lives on its own worker thread (the PJRT client is not
+//! `Send`; the CPU engine keeps its worker pool per replica).
+//!
+//! Configuration goes through [`ServeConfig::builder`], which validates
+//! combinations (batch size vs compiled artifacts, queue capacity vs
+//! batch size, worker counts) at construction — not deep inside
+//! [`Coordinator::start`]. Intake errors are typed
+//! ([`crate::error::SubaccelError`]) so callers can distinguish
+//! `QueueFull` backpressure from `BadShape` rejections.
 
 use super::batcher::{BatchPlan, Batcher};
+use crate::accel::ConvEngine;
 use crate::data::load_weights;
+use crate::error::SubaccelError;
 use crate::metrics::ServerMetrics;
-use crate::runtime::{LeNet5Executor, Runtime, Variant};
+use crate::runtime::{LeNet5Executor, PairedCpuLeNet5, Runtime, Variant};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Coordinator configuration.
+/// Which executor each replica runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// A compiled PJRT artifact family (requires `*.hlo.txt` files
+    /// lowered for the configured batch size).
+    Pjrt(Variant),
+    /// The in-process paired CPU engine ([`PairedCpuLeNet5`]): no
+    /// artifact needed, any batch size, `engine_threads` cores per
+    /// replica.
+    CpuEngine,
+}
+
+/// Batch sizes the AOT pipeline lowers artifacts for.
+const COMPILED_BATCH_SIZES: [usize; 3] = [1, 8, 32];
+
+/// Coordinator configuration. Construct via [`ServeConfig::builder`];
+/// fields are validated together at `build()` time.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Directory holding `*.hlo.txt` + `weights.bin`.
-    pub artifacts_dir: PathBuf,
-    /// Which artifact family to execute.
-    pub variant: Variant,
-    /// Compiled batch size (an artifact must exist for it: 1, 8 or 32).
-    pub batch_size: usize,
-    /// Max time a request waits for batch-mates.
-    pub max_wait: Duration,
-    /// Bound on queued requests before rejection (backpressure).
-    pub queue_cap: usize,
-    /// Initial rounding size (0 = original weights).
-    pub rounding: f32,
-    /// Replicated executor workers (each owns a PJRT client + compiled
-    /// artifact and pulls batches from a shared queue). >1 pays off on
-    /// multi-core hosts; on this 1-core testbed it validates the
-    /// architecture, not throughput.
-    pub workers: usize,
+    artifacts_dir: PathBuf,
+    backend: Backend,
+    batch_size: usize,
+    max_wait: Duration,
+    queue_cap: usize,
+    rounding: f32,
+    workers: usize,
+    engine_threads: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
             artifacts_dir: PathBuf::from("artifacts"),
-            variant: Variant::XlaNative,
+            backend: Backend::Pjrt(Variant::XlaNative),
             batch_size: 8,
             max_wait: Duration::from_millis(2),
             queue_cap: 1024,
             rounding: 0.0,
             workers: 1,
+            engine_threads: 1,
         }
+    }
+}
+
+impl ServeConfig {
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: Self::default() }
+    }
+
+    /// Directory holding `*.hlo.txt` + `weights.bin`.
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.artifacts_dir
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Batch size requests are grouped (and padded) to.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Max time a request waits for batch-mates.
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
+    }
+
+    /// Bound on queued requests before rejection (backpressure).
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Initial rounding size (0 = original weights).
+    pub fn rounding(&self) -> f32 {
+        self.rounding
+    }
+
+    /// Replicated executor workers pulling batches from a shared queue.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Engine threads per replica (CPU backend only).
+    pub fn engine_threads(&self) -> usize {
+        self.engine_threads
+    }
+}
+
+/// Validating builder for [`ServeConfig`] — invalid combinations are
+/// rejected here, with a typed [`SubaccelError::InvalidConfig`] naming
+/// the offending field.
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Shorthand for `backend(Backend::Pjrt(variant))`.
+    pub fn variant(self, variant: Variant) -> Self {
+        self.backend(Backend::Pjrt(variant))
+    }
+
+    pub fn batch_size(mut self, n: usize) -> Self {
+        self.cfg.batch_size = n;
+        self
+    }
+
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.cfg.max_wait = d;
+        self
+    }
+
+    pub fn queue_cap(mut self, n: usize) -> Self {
+        self.cfg.queue_cap = n;
+        self
+    }
+
+    pub fn rounding(mut self, r: f32) -> Self {
+        self.cfg.rounding = r;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    pub fn engine_threads(mut self, n: usize) -> Self {
+        self.cfg.engine_threads = n;
+        self
+    }
+
+    pub fn build(self) -> Result<ServeConfig, SubaccelError> {
+        let c = &self.cfg;
+        let invalid = |field: &'static str, reason: String| {
+            Err(SubaccelError::InvalidConfig { field, reason })
+        };
+        if c.workers == 0 {
+            return invalid("workers", "at least one executor worker is required".into());
+        }
+        if c.engine_threads == 0 {
+            return invalid("engine_threads", "engine needs at least one thread".into());
+        }
+        if c.batch_size == 0 {
+            return invalid("batch_size", "batch size must be at least 1".into());
+        }
+        if c.queue_cap < c.batch_size {
+            return invalid(
+                "queue_cap",
+                format!(
+                    "queue capacity {} cannot hold one batch of {}",
+                    c.queue_cap, c.batch_size
+                ),
+            );
+        }
+        if !c.rounding.is_finite() || c.rounding < 0.0 {
+            return invalid("rounding", format!("rounding must be finite and ≥ 0, got {}", c.rounding));
+        }
+        if matches!(c.backend, Backend::Pjrt(_))
+            && !COMPILED_BATCH_SIZES.contains(&c.batch_size)
+        {
+            return invalid(
+                "batch_size",
+                format!(
+                    "no compiled artifact for batch {} (available: {:?}); \
+                     use Backend::CpuEngine for arbitrary batch sizes",
+                    c.batch_size, COMPILED_BATCH_SIZES
+                ),
+            );
+        }
+        Ok(self.cfg)
     }
 }
 
@@ -85,7 +245,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the pipeline: executor actor thread + batcher thread.
+    /// Start the pipeline: executor worker threads + batcher thread.
     pub fn start(cfg: ServeConfig) -> Result<Self> {
         let metrics = Arc::new(ServerMetrics::new());
         let n_workers = cfg.workers.max(1);
@@ -93,7 +253,7 @@ impl Coordinator {
         let (work_tx, work_rx) = mpsc::channel::<WorkBatch>();
         let shared_rx = Arc::new(std::sync::Mutex::new(work_rx));
 
-        // --- executor workers: each owns its (non-Send) PJRT state -------
+        // --- executor workers: each owns its backend state ---------------
         let mut workers = Vec::with_capacity(n_workers);
         let mut ctls = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
@@ -103,7 +263,7 @@ impl Coordinator {
             let wmetrics = metrics.clone();
             let wshared = shared_rx.clone();
             let handle = std::thread::Builder::new()
-                .name(format!("pjrt-executor-{w}"))
+                .name(format!("executor-{w}"))
                 .spawn(move || worker_loop(wcfg, wshared, ctl_rx, init_tx, wmetrics))
                 .context("spawn executor thread")?;
             init_rx
@@ -126,32 +286,44 @@ impl Coordinator {
     }
 
     /// Submit one `(1, 1, 32, 32)` image; returns a receiver that resolves
-    /// to 10 logits. Fails fast when the queue is full (backpressure).
-    pub fn submit(&self, image: Tensor) -> Result<LogitsRx> {
+    /// to 10 logits. Errors are typed: [`SubaccelError::BadShape`] for a
+    /// wrong input, [`SubaccelError::QueueFull`] when backpressure kicks
+    /// in (retriable), [`SubaccelError::PipelineClosed`] after shutdown.
+    pub fn submit(&self, image: Tensor) -> Result<LogitsRx, SubaccelError> {
         if image.shape() != [1, 1, 32, 32] {
-            bail!("expected (1,1,32,32) input, got {:?}", image.shape());
+            return Err(SubaccelError::BadShape {
+                expected: vec![1, 1, 32, 32],
+                got: image.shape().to_vec(),
+            });
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::sync_channel(1);
         let req = Request { image, submitted: Instant::now(), reply };
-        if self.tx.try_send(req).is_err() {
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            bail!("queue full: backpressure rejection");
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubaccelError::QueueFull)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubaccelError::PipelineClosed)
+            }
         }
-        Ok(rx)
     }
 
-    /// Blocking classify convenience.
+    /// Blocking classify convenience (`anyhow` at this edge; downcast to
+    /// [`SubaccelError`] to branch on intake failures).
     pub fn classify(&self, image: Tensor) -> Result<Vec<f32>> {
         self.submit(image)?
             .recv()
             .map_err(|_| anyhow!("pipeline dropped request"))?
     }
 
-    /// Install the rounding variant (preprocess + swap weight literals) on
-    /// every worker. Returns the number of combined pairs. The variant is
-    /// fully installed on all replicas before this returns — later
-    /// requests are guaranteed the new weights.
+    /// Install the rounding variant (preprocess + swap weights) on every
+    /// worker. Returns the number of combined pairs. The variant is fully
+    /// installed on all replicas before this returns — later requests are
+    /// guaranteed the new weights.
     pub fn set_rounding(&self, rounding: f32) -> Result<usize> {
         let mut rxs = Vec::with_capacity(self.ctls.len());
         for ctl in &self.ctls {
@@ -199,9 +371,37 @@ impl Drop for Coordinator {
     }
 }
 
-/// Executor worker: builds the runtime in-thread (PJRT state is !Send),
-/// then alternates between its control channel and the shared batch
-/// queue until the queue disconnects (shutdown).
+/// A replica's executor: either a compiled PJRT artifact or the paired
+/// CPU engine. Same execute/variant-switch contract either way.
+enum WorkerExec {
+    Pjrt(LeNet5Executor),
+    Cpu(PairedCpuLeNet5),
+}
+
+impl WorkerExec {
+    fn execute(&self, images: &Tensor) -> Result<Tensor> {
+        match self {
+            WorkerExec::Pjrt(e) => e.execute(images),
+            WorkerExec::Cpu(e) => e.execute(images),
+        }
+    }
+
+    fn install_variant(
+        &mut self,
+        base: &HashMap<String, Tensor>,
+        rounding: f32,
+    ) -> Result<usize> {
+        match self {
+            WorkerExec::Pjrt(e) => e.install_variant(base, rounding),
+            WorkerExec::Cpu(e) => e.install(base, rounding),
+        }
+    }
+}
+
+/// Executor worker: builds its backend in-thread (PJRT state is !Send;
+/// the CPU engine's worker pool belongs to this replica), then alternates
+/// between its control channel and the shared batch queue until the
+/// queue disconnects (shutdown).
 fn worker_loop(
     cfg: ServeConfig,
     shared: Arc<std::sync::Mutex<mpsc::Receiver<WorkBatch>>>,
@@ -209,16 +409,30 @@ fn worker_loop(
     init_tx: mpsc::SyncSender<Result<()>>,
     metrics: Arc<ServerMetrics>,
 ) {
-    type Built = (LeNet5Executor, std::collections::HashMap<String, Tensor>);
+    type Built = (WorkerExec, HashMap<String, Tensor>);
     let built = (|| -> Result<Built> {
-        let rt = Runtime::cpu()?;
         let base = load_weights(cfg.artifacts_dir.join("weights.bin"))?;
-        let mut exe =
-            LeNet5Executor::load(&rt, &cfg.artifacts_dir, cfg.variant, cfg.batch_size, &base)?;
-        if cfg.rounding > 0.0 {
-            exe.install_variant(&base, cfg.rounding)?;
-        }
-        Ok((exe, base))
+        let exec = match cfg.backend {
+            Backend::Pjrt(variant) => {
+                let rt = Runtime::cpu()?;
+                let mut exe = LeNet5Executor::load(
+                    &rt,
+                    &cfg.artifacts_dir,
+                    variant,
+                    cfg.batch_size,
+                    &base,
+                )?;
+                if cfg.rounding > 0.0 {
+                    exe.install_variant(&base, cfg.rounding)?;
+                }
+                WorkerExec::Pjrt(exe)
+            }
+            Backend::CpuEngine => {
+                let engine = Arc::new(ConvEngine::new(cfg.engine_threads)?);
+                WorkerExec::Cpu(PairedCpuLeNet5::new(engine, &base, cfg.rounding)?)
+            }
+        };
+        Ok((exec, base))
     })();
     let (mut exe, base) = match built {
         Ok(v) => {
@@ -336,8 +550,85 @@ mod tests {
     #[test]
     fn config_default_sane() {
         let c = ServeConfig::default();
-        assert_eq!(c.batch_size, 8);
-        assert!(c.queue_cap >= c.batch_size);
+        assert_eq!(c.batch_size(), 8);
+        assert!(c.queue_cap() >= c.batch_size());
+    }
+
+    #[test]
+    fn builder_round_trips_fields() {
+        let c = ServeConfig::builder()
+            .artifacts_dir("somewhere")
+            .backend(Backend::CpuEngine)
+            .batch_size(4)
+            .max_wait(Duration::from_millis(7))
+            .queue_cap(64)
+            .rounding(0.25)
+            .workers(2)
+            .engine_threads(3)
+            .build()
+            .unwrap();
+        assert_eq!(c.artifacts_dir(), &PathBuf::from("somewhere"));
+        assert_eq!(c.backend(), Backend::CpuEngine);
+        assert_eq!(c.batch_size(), 4);
+        assert_eq!(c.max_wait(), Duration::from_millis(7));
+        assert_eq!(c.queue_cap(), 64);
+        assert_eq!(c.rounding(), 0.25);
+        assert_eq!(c.workers(), 2);
+        assert_eq!(c.engine_threads(), 3);
+    }
+
+    #[test]
+    fn builder_rejects_zero_workers() {
+        let err = ServeConfig::builder().workers(0).build().unwrap_err();
+        assert!(matches!(err, SubaccelError::InvalidConfig { field: "workers", .. }), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_queue_smaller_than_batch() {
+        let err = ServeConfig::builder().batch_size(8).queue_cap(2).build().unwrap_err();
+        assert!(
+            matches!(err, SubaccelError::InvalidConfig { field: "queue_cap", .. }),
+            "{err}"
+        );
+        // equality is allowed
+        assert!(ServeConfig::builder().batch_size(8).queue_cap(8).build().is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_uncompiled_pjrt_batch() {
+        let err = ServeConfig::builder().batch_size(7).build().unwrap_err();
+        match err {
+            SubaccelError::InvalidConfig { field: "batch_size", reason } => {
+                assert!(reason.contains("no compiled artifact"), "{reason}");
+            }
+            other => panic!("expected batch_size rejection, got {other}"),
+        }
+        // the CPU engine has no compiled shape constraint
+        assert!(ServeConfig::builder()
+            .backend(Backend::CpuEngine)
+            .batch_size(7)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_bad_rounding_and_zero_threads() {
+        assert!(matches!(
+            ServeConfig::builder().rounding(f32::NAN).build().unwrap_err(),
+            SubaccelError::InvalidConfig { field: "rounding", .. }
+        ));
+        assert!(matches!(
+            ServeConfig::builder().rounding(-0.1).build().unwrap_err(),
+            SubaccelError::InvalidConfig { field: "rounding", .. }
+        ));
+        assert!(matches!(
+            ServeConfig::builder().engine_threads(0).build().unwrap_err(),
+            SubaccelError::InvalidConfig { field: "engine_threads", .. }
+        ));
+        assert!(matches!(
+            ServeConfig::builder().batch_size(0).build().unwrap_err(),
+            SubaccelError::InvalidConfig { field: "batch_size", .. }
+        ));
     }
 
     // Full pipeline tests (require artifacts) live in rust/tests/.

@@ -1,0 +1,93 @@
+//! Typed library errors.
+//!
+//! Library surfaces (the coordinator intake and the accel engine) return
+//! [`SubaccelError`] so callers can *match* on failure modes — retry on
+//! [`SubaccelError::QueueFull`], reject on [`SubaccelError::BadShape`] —
+//! instead of grepping strings. `anyhow` stays at the binary edge and in
+//! the artifact-I/O paths where errors are environmental, not actionable;
+//! `SubaccelError` implements [`std::error::Error`], so `?` converts it
+//! into `anyhow::Error` at that edge for free.
+//!
+//! Hand-rolled (no `thiserror` in the offline vendor set).
+
+use std::fmt;
+
+/// Errors produced by the library surfaces of this crate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubaccelError {
+    /// The coordinator's bounded intake queue is full (backpressure).
+    /// Retriable: resubmit after a short wait.
+    QueueFull,
+    /// The coordinator pipeline has shut down; no further requests will
+    /// be accepted. Not retriable.
+    PipelineClosed,
+    /// An input tensor's shape differs from what the pipeline was built
+    /// for (e.g. a non-`(1,1,32,32)` image submitted to the LeNet-5
+    /// coordinator).
+    BadShape { expected: Vec<usize>, got: Vec<usize> },
+    /// A conv input's per-patch length (`Cin·kh·kw`) does not match the
+    /// pairing the layer was compiled with.
+    KernelMismatch { expected_k: usize, got_k: usize },
+    /// A configuration builder rejected an invalid field or combination.
+    InvalidConfig { field: &'static str, reason: String },
+}
+
+impl fmt::Display for SubaccelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubaccelError::QueueFull => {
+                write!(f, "queue full: backpressure rejection")
+            }
+            SubaccelError::PipelineClosed => {
+                write!(f, "pipeline closed: coordinator has shut down")
+            }
+            SubaccelError::BadShape { expected, got } => {
+                write!(f, "bad input shape: expected {expected:?}, got {got:?}")
+            }
+            SubaccelError::KernelMismatch { expected_k, got_k } => {
+                write!(
+                    f,
+                    "input channels/kernel mismatch: pairing compiled for \
+                     K={expected_k}, input yields K={got_k}"
+                )
+            }
+            SubaccelError::InvalidConfig { field, reason } => {
+                write!(f, "invalid config `{field}`: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubaccelError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure_mode() {
+        assert!(SubaccelError::QueueFull.to_string().contains("queue full"));
+        let e = SubaccelError::BadShape { expected: vec![1, 1, 32, 32], got: vec![1, 1, 28, 28] };
+        assert!(e.to_string().contains("[1, 1, 32, 32]"), "{e}");
+        let e = SubaccelError::KernelMismatch { expected_k: 150, got_k: 75 };
+        assert!(e.to_string().contains("150"), "{e}");
+    }
+
+    #[test]
+    fn matchable_variants() {
+        let e: SubaccelError = SubaccelError::QueueFull;
+        assert!(matches!(e, SubaccelError::QueueFull));
+        assert_eq!(SubaccelError::QueueFull, SubaccelError::QueueFull);
+        assert_ne!(SubaccelError::QueueFull, SubaccelError::PipelineClosed);
+    }
+
+    #[test]
+    fn converts_into_anyhow_at_the_edge() {
+        fn edge() -> anyhow::Result<()> {
+            Err(SubaccelError::QueueFull)?
+        }
+        let err = edge().unwrap_err();
+        assert!(err.downcast_ref::<SubaccelError>().is_some());
+        assert!(matches!(err.downcast_ref(), Some(SubaccelError::QueueFull)));
+    }
+}

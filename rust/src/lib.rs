@@ -5,29 +5,50 @@
 //! three-layer rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the serving coordinator, the paper's weight
-//!   preprocessor (Algorithm 1), the modified convolution unit, the
-//!   hardware cost model that substitutes for Synopsys DC + TSMC 65 nm,
-//!   and a pure-rust CNN engine used as a second numerical oracle.
+//!   preprocessor (Algorithm 1), the modified convolution unit and its
+//!   multi-threaded packed execution engine, the hardware cost model
+//!   that substitutes for Synopsys DC + TSMC 65 nm, and a pure-rust CNN
+//!   engine used as a second numerical oracle.
 //! * **L2/L1 (python/, build-time only)** — LeNet-5 in JAX calling Pallas
 //!   kernels, AOT-lowered to HLO text in `artifacts/` and executed here
 //!   through the PJRT CPU client ([`runtime`]). Python never runs on the
 //!   request path.
 //!
+//! ## Public API shape
+//!
+//! * Configuration is *validated at construction*:
+//!   [`coordinator::ServeConfig::builder`] rejects inconsistent
+//!   combinations (zero workers, queue smaller than a batch, batch sizes
+//!   with no compiled artifact) before any thread spawns.
+//! * Fallible library calls return the typed [`error::SubaccelError`];
+//!   `anyhow` appears only at binary/example edges.
+//! * Serving observability is structured:
+//!   [`metrics::ServerMetrics::snapshot`] returns a
+//!   [`metrics::MetricsSnapshot`] (counters + latency percentiles) whose
+//!   `Display` impl is the human-readable summary line.
+//! * The hot path is [`accel::ConvEngine`]: a persistent worker pool
+//!   executing [`accel::PackedPairing`] (structure-of-arrays pairing
+//!   tables) over im2col row shards, bit-identical across thread counts.
+//!
 //! Module map (see DESIGN.md for the experiment index):
 //!
 //! | module | role |
 //! |---|---|
-//! | [`tensor`] | minimal f32 NCHW tensor substrate |
-//! | [`nn`] | pure-rust CNN inference engine + LeNet-5/AlexNet defs |
+//! | [`tensor`] | minimal f32 NCHW tensor substrate + reusable im2col |
+//! | [`nn`] | pure-rust CNN inference engine + LeNet-5/AlexNet defs + [`nn::PairedModel`] |
 //! | [`data`] | tensor container I/O + datasets (wire contract with python) |
-//! | [`accel`] | **the paper**: Algorithm 1, subtractor conv unit, op counts |
+//! | [`accel`] | **the paper**: Algorithm 1, subtractor conv unit, packed parallel engine, op counts |
 //! | [`hw`] | 65 nm IEEE-754 cost model, virtual synthesis, PE simulator |
-//! | [`runtime`] | PJRT: load `artifacts/*.hlo.txt`, compile, execute |
-//! | [`coordinator`] | async request router + dynamic batcher + metrics |
+//! | [`runtime`] | PJRT: load `artifacts/*.hlo.txt`, compile, execute; CPU paired executor |
+//! | [`coordinator`] | async request router + dynamic batcher + backend selection |
+//! | [`metrics`] | lock-free serving counters + log-bucketed latency histograms |
+//! | [`error`] | [`error::SubaccelError`] — the crate-wide typed error enum |
+//! | [`util`] | in-tree PRNG, property-test harness, bench loop, temp dirs |
 
 pub mod accel;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod hw;
 pub mod metrics;
 pub mod nn;

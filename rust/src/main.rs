@@ -15,14 +15,15 @@
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 use subaccel::accel::{
-    histogram, model_op_sweep, LayerPairing, SubConv2d, WeightStats, TABLE1_ROUNDINGS,
+    histogram, model_op_sweep, ConvEngine, LayerPairing, WeightStats, TABLE1_ROUNDINGS,
 };
-use subaccel::coordinator::{Coordinator, ServeConfig};
+use subaccel::coordinator::{Backend, Coordinator, ServeConfig};
 use subaccel::data::{load_dataset, load_weights, Dataset};
 use subaccel::hw::{savings_report, CostModel};
 use subaccel::nn::{alexnet, lenet5_from_params, Model};
-use subaccel::runtime::Variant;
+use subaccel::runtime::{PairedCpuLeNet5, Variant};
 use subaccel::tensor::Tensor;
 
 const USAGE: &str = "\
@@ -35,10 +36,14 @@ COMMANDS
   report   [--layer c1|c3|c5] [--bins N]       Fig 3 / Fig 4 weight report
   profile  [--reps N]                          Fig 1 AlexNet layer profile
   infer    [--count N] [--engine rust|subconv|pallas|xla|paired] [--rounding R]
-           (paired = the fully-paired AOT artifact: every conv layer runs
-            the subtractor datapath inside the PJRT executable)
-  serve    [--requests N] [--batch 1|8|32] [--rounding R] [--clients N]
-           [--engine pallas|xla] [--workers N]
+           [--threads N]
+           (subconv = the in-process paired engine on N threads, 0 = all
+            cores; paired = the fully-paired AOT artifact: every conv
+            layer runs the subtractor datapath inside the PJRT executable)
+  serve    [--requests N] [--batch N] [--rounding R] [--clients N]
+           [--engine pallas|xla|cpu] [--workers N] [--threads N]
+           (pallas/xla need compiled artifacts, batch 1/8/32; cpu runs the
+            paired engine in-process with N threads per worker, any batch)
   synth    [--rounding R] [--mac-lanes N] [--sub-lanes N]
            virtual synthesis: absolute power/area/cycles per design point
 ";
@@ -297,16 +302,18 @@ fn infer(artifacts: &PathBuf, args: &Args) -> Result<()> {
             }
         }
         "subconv" => {
-            // the actual paired subtractor datapath for conv layers
-            let model = lenet5_from_params(&weights);
-            let infos = model.conv_layers(&[1, 1, 32, 32]);
-            let units: Vec<SubConv2d> = infos
-                .iter()
-                .map(|i| SubConv2d::compile(&i.weight, &i.bias, rounding))
-                .collect();
+            // the actual paired subtractor datapath for conv layers, on
+            // the in-process engine (--threads 0 = all cores)
+            let threads = match args.get("threads", 1usize)? {
+                0 => ConvEngine::host_threads(),
+                t => t,
+            };
+            let engine = Arc::new(ConvEngine::new(threads)?);
+            let exe = PairedCpuLeNet5::new(engine, &weights, rounding)?;
+            println!("pairs per conv layer: {:?} ({threads} threads)", exe.pairs_per_layer());
             for i in 0..n {
-                let pred = subconv_forward(&weights, &units, &ds.image32(i));
-                hits += (pred == ds.labels[i] as usize) as usize;
+                let logits = exe.execute(&ds.image32(i))?;
+                hits += (logits.argmax_rows()[0] == ds.labels[i] as usize) as usize;
             }
         }
         "pallas" | "xla" => {
@@ -337,25 +344,6 @@ fn infer(artifacts: &PathBuf, args: &Args) -> Result<()> {
     }
     println!("{hits}/{n} correct ({:.2}%) at rounding {rounding} [{engine}]", 100.0 * hits as f64 / n as f64);
     Ok(())
-}
-
-/// LeNet-5 forward with conv layers on the paired subtractor unit.
-fn subconv_forward(weights: &HashMap<String, Tensor>, units: &[SubConv2d], x: &Tensor) -> usize {
-    use subaccel::nn::layers::{avgpool2, dense_layer, tanh_inplace};
-    let mut h = x.clone();
-    for (i, unit) in units.iter().enumerate() {
-        let (mut out, _) = unit.forward(&h);
-        tanh_inplace(&mut out);
-        h = out;
-        if i < 2 {
-            h = avgpool2(&h);
-        }
-    }
-    let b = h.shape()[0];
-    h = h.reshape(&[b, 120]);
-    let mut f6 = dense_layer(&h, &weights["f6_w"], &weights["f6_b"]);
-    tanh_inplace(&mut f6);
-    dense_layer(&f6, &weights["out_w"], &weights["out_b"]).argmax_rows()[0]
 }
 
 /// Virtual synthesis: absolute design-point numbers (the paper reports
@@ -409,23 +397,27 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let rounding: f32 = args.get("rounding", 0.05)?;
     let clients: usize = args.get("clients", 8)?;
     let engine = args.str("engine", "xla");
-    if ![1usize, 8, 32].contains(&batch) {
-        bail!("batch must be one of 1/8/32 (compiled artifacts)");
-    }
-    let variant = match engine.as_str() {
-        "pallas" => Variant::Pallas,
-        "xla" => Variant::XlaNative,
-        other => bail!("unknown engine {other} (pallas|xla)"),
+    let backend = match engine.as_str() {
+        "pallas" => Backend::Pjrt(Variant::Pallas),
+        "xla" => Backend::Pjrt(Variant::XlaNative),
+        "cpu" => Backend::CpuEngine,
+        other => bail!("unknown engine {other} (pallas|xla|cpu)"),
     };
     let workers: usize = args.get("workers", 1)?;
-    let cfg = ServeConfig {
-        artifacts_dir: artifacts.clone(),
-        batch_size: batch,
-        rounding,
-        variant,
-        workers,
-        ..Default::default()
+    let threads = match args.get("threads", 1usize)? {
+        0 => ConvEngine::host_threads(),
+        t => t,
     };
+    // the builder rejects invalid combinations (e.g. a PJRT batch size
+    // with no compiled artifact) before any thread spawns
+    let cfg = ServeConfig::builder()
+        .artifacts_dir(artifacts.clone())
+        .backend(backend)
+        .batch_size(batch)
+        .rounding(rounding)
+        .workers(workers)
+        .engine_threads(threads)
+        .build()?;
     let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
     let ds = std::sync::Arc::new(load_dataset(artifacts.join("dataset.bin"))?);
     let per_client = requests / clients.max(1);
@@ -466,6 +458,11 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
         done as f64 / dt.as_secs_f64()
     );
     println!("accuracy {:.2}% at rounding {rounding}", 100.0 * hits as f64 / done as f64);
-    println!("{}", coord.metrics().summary());
+    let snap = coord.metrics().snapshot();
+    println!("{snap}");
+    println!(
+        "latency tail: e2e p99 {}us (max {}us), exec p99 {}us, queue p99 {}us",
+        snap.e2e.p99_us, snap.e2e.max_us, snap.execute.p99_us, snap.queue.p99_us
+    );
     Ok(())
 }

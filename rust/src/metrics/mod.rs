@@ -1,7 +1,10 @@
 //! Serving metrics: latency histograms and throughput counters for the
-//! coordinator. Lock-free on the hot path (atomics); snapshots are cheap
-//! and consistent-enough for reporting.
+//! coordinator. Lock-free on the hot path (atomics); the primary read
+//! interface is a structured [`MetricsSnapshot`] (fields to assert on or
+//! export), with the human-readable one-liner available as its
+//! `Display` impl / [`ServerMetrics::summary`].
 
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -59,22 +62,53 @@ impl LatencyHistogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
-    /// Approximate percentile (bucket upper bound), `p` in [0, 100].
+    /// Approximate percentile, `p` in [0, 100]: the *inclusive* upper
+    /// bound of the bucket holding the p-th sample (`2^(i+1) − 1` for
+    /// bucket `[2^i, 2^(i+1))`), clamped to the observed maximum so no
+    /// percentile ever exceeds `max_us`.
     pub fn percentile_us(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
-        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let target = (((p / 100.0) * total as f64).ceil() as u64).max(1);
         let mut seen = 0;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return 1u64 << (i + 1);
+                // the last bucket is open-ended [2^(BUCKETS-1), ∞): its
+                // only honest bound is the observed maximum
+                if i == BUCKETS - 1 {
+                    return self.max_us();
+                }
+                return ((1u64 << (i + 1)) - 1).min(self.max_us());
             }
         }
-        u64::MAX
+        // target ≤ total guarantees the loop matched; a racing reader
+        // can still land here — report the observed maximum, not u64::MAX
+        self.max_us()
     }
+
+    /// Consistent-enough point-in-time view of this histogram.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            mean_us: self.mean_us(),
+            p50_us: self.percentile_us(50.0),
+            p99_us: self.percentile_us(99.0),
+            max_us: self.max_us(),
+        }
+    }
+}
+
+/// Point-in-time summary of one latency histogram.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
 }
 
 /// Counters for the serving pipeline.
@@ -104,19 +138,58 @@ impl ServerMetrics {
         }
     }
 
+    /// The primary read interface: every counter and histogram as plain
+    /// fields. Assert on these (or export them) instead of parsing the
+    /// `Display` string.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_items: self.batched_items.load(Ordering::Relaxed),
+            mean_batch_size: self.mean_batch_size(),
+            queue: self.queue_latency.snapshot(),
+            e2e: self.e2e_latency.snapshot(),
+            execute: self.execute_latency.snapshot(),
+        }
+    }
+
+    /// Human-readable one-liner (the snapshot's `Display`).
     pub fn summary(&self) -> String {
-        format!(
+        self.snapshot().to_string()
+    }
+}
+
+/// Structured view of [`ServerMetrics`] at one point in time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub mean_batch_size: f64,
+    pub queue: HistogramSnapshot,
+    pub e2e: HistogramSnapshot,
+    pub execute: HistogramSnapshot,
+}
+
+impl fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
             "requests={} completed={} rejected={} batches={} mean_batch={:.2} \
              e2e_mean={:.0}us e2e_p50={}us e2e_p99={}us exec_mean={:.0}us",
-            self.requests.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.mean_batch_size(),
-            self.e2e_latency.mean_us(),
-            self.e2e_latency.percentile_us(50.0),
-            self.e2e_latency.percentile_us(99.0),
-            self.execute_latency.mean_us(),
+            self.requests,
+            self.completed,
+            self.rejected,
+            self.batches,
+            self.mean_batch_size,
+            self.e2e.mean_us,
+            self.e2e.p50_us,
+            self.e2e.p99_us,
+            self.execute.mean_us,
         )
     }
 }
@@ -143,6 +216,7 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.mean_us(), 0.0);
         assert_eq!(h.percentile_us(50.0), 0);
+        assert_eq!(h.snapshot(), HistogramSnapshot::default());
     }
 
     #[test]
@@ -154,11 +228,72 @@ mod tests {
     }
 
     #[test]
+    fn percentile_reports_own_bucket_bound() {
+        // regression: a 1 µs sample used to report 2 µs (the *next*
+        // bucket's bound); it must report its own bucket, clamped to max
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(1));
+        assert_eq!(h.percentile_us(50.0), 1);
+        assert_eq!(h.percentile_us(100.0), 1);
+
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(10)); // bucket [8, 16)
+        assert_eq!(h.percentile_us(50.0), 10); // 15 clamped to max_us
+        h.record(Duration::from_micros(14));
+        assert_eq!(h.percentile_us(99.0), 14);
+    }
+
+    #[test]
+    fn percentile_never_exceeds_max() {
+        let h = LatencyHistogram::new();
+        // deep into the last bucket (≥ 2^24 µs): no u64::MAX fall-through
+        h.record(Duration::from_secs(60));
+        assert_eq!(h.percentile_us(99.0), 60_000_000);
+        assert!(h.percentile_us(100.0) <= h.max_us());
+    }
+
+    #[test]
+    fn histogram_snapshot_fields() {
+        let h = LatencyHistogram::new();
+        for us in [100u64, 200, 400, 800] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert!((s.mean_us - 375.0).abs() < 1.0);
+        assert_eq!(s.max_us, 800);
+        assert!(s.p50_us >= 200 && s.p50_us <= 255, "p50 {}", s.p50_us);
+        assert!(s.p99_us >= 800 && s.p99_us <= s.max_us);
+    }
+
+    #[test]
     fn metrics_batch_mean() {
         let m = ServerMetrics::new();
         m.batches.store(2, Ordering::Relaxed);
         m.batched_items.store(9, Ordering::Relaxed);
         assert!((m.mean_batch_size() - 4.5).abs() < 1e-9);
         assert!(m.summary().contains("mean_batch=4.50"));
+    }
+
+    #[test]
+    fn snapshot_carries_counters_and_displays_like_summary() {
+        let m = ServerMetrics::new();
+        m.requests.store(10, Ordering::Relaxed);
+        m.completed.store(8, Ordering::Relaxed);
+        m.rejected.store(2, Ordering::Relaxed);
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_items.store(8, Ordering::Relaxed);
+        m.e2e_latency.record(Duration::from_micros(100));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.completed, 8);
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.batches, 4);
+        assert_eq!(s.batched_items, 8);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+        assert_eq!(s.e2e.count, 1);
+        // summary() is exactly the snapshot's Display
+        assert_eq!(m.summary(), s.to_string());
+        assert!(s.to_string().starts_with("requests=10 completed=8 rejected=2"));
     }
 }

@@ -14,7 +14,10 @@ pub enum Activation {
 }
 
 impl Activation {
-    fn apply(&self, x: &mut Tensor) -> u64 {
+    /// Apply in place; returns the activation-op count. `pub(crate)` so
+    /// the paired forward ([`crate::nn::PairedModel`]) shares the exact
+    /// same non-linearity code as the dense path.
+    pub(crate) fn apply(&self, x: &mut Tensor) -> u64 {
         match self {
             Activation::None => 0,
             Activation::Tanh => {

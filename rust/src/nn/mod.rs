@@ -18,8 +18,8 @@ mod models;
 mod ops;
 
 pub use layers::{Activation, Layer, LayerKind};
-pub use models::{alexnet, lenet5, lenet5_from_params, vgg_small, Model};
-pub use ops::OpCounts;
+pub use models::{alexnet, lenet5, lenet5_from_params, vgg_small, Model, PairedModel};
+pub use ops::{ForwardCounts, OpCounts};
 
 #[cfg(test)]
 mod tests {

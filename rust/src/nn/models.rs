@@ -1,9 +1,13 @@
 //! Model definitions: a composable [`Model`] (sequence of layers) plus the
 //! two networks the paper uses — LeNet-5 (the evaluation target, Fig 2)
-//! and AlexNet (the motivation figure, Fig 1).
+//! and AlexNet (the motivation figure, Fig 1). [`PairedModel`] is a model
+//! compiled to the subtractor representation, executing its conv layers
+//! on a shared [`ConvEngine`].
 
 use super::layers::{Activation, Layer, LayerKind};
 use super::ops::{ForwardCounts, OpCounts};
+use crate::accel::{ConvEngine, SubConv2d};
+use crate::error::SubaccelError;
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -100,6 +104,110 @@ impl Model {
             }
         }
         panic!("no conv layer named {name}");
+    }
+}
+
+/// One layer of a [`PairedModel`]: conv layers carry a compiled
+/// subtractor unit, everything else runs the ordinary dense code.
+#[derive(Debug, Clone)]
+enum PairedLayer {
+    Sub { name: String, unit: SubConv2d, act: Activation },
+    Plain(Layer),
+}
+
+/// A [`Model`] compiled to the paper's paired representation: every conv
+/// layer becomes a [`SubConv2d`] (preprocessed once at the configured
+/// rounding), pooling/dense/activation layers are shared with the dense
+/// path. Execution goes through a caller-supplied [`ConvEngine`], so one
+/// engine (and its worker pool + scratch) serves the whole network — and
+/// can be shared across models, e.g. per coordinator replica.
+#[derive(Debug, Clone)]
+pub struct PairedModel {
+    name: String,
+    layers: Vec<PairedLayer>,
+    rounding: f32,
+}
+
+impl PairedModel {
+    /// Compile every conv layer of `model` at the given rounding size.
+    pub fn compile(model: &Model, rounding: f32) -> Self {
+        let layers = model
+            .layers
+            .iter()
+            .map(|layer| match &layer.kind {
+                LayerKind::Conv2d { weight, bias, stride, pad } => PairedLayer::Sub {
+                    name: layer.name.clone(),
+                    unit: SubConv2d::compile_geo(weight, bias, rounding, *stride, *pad),
+                    act: layer.act,
+                },
+                _ => PairedLayer::Plain(layer.clone()),
+            })
+            .collect();
+        Self { name: model.name.clone(), layers, rounding }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn rounding(&self) -> f32 {
+        self.rounding
+    }
+
+    /// Total combined pairs across all conv layers.
+    pub fn total_pairs(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                PairedLayer::Sub { unit, .. } => unit.total_pairs(),
+                PairedLayer::Plain(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Per-conv-layer pair counts `(name, pairs)`.
+    pub fn pairs_per_conv(&self) -> Vec<(String, usize)> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                PairedLayer::Sub { name, unit, .. } => {
+                    Some((name.clone(), unit.total_pairs()))
+                }
+                PairedLayer::Plain(_) => None,
+            })
+            .collect()
+    }
+
+    /// Full forward pass on the given engine, with per-layer op
+    /// accounting (conv layers report paired sub/MAC counts).
+    pub fn forward_with(
+        &self,
+        engine: &ConvEngine,
+        x: &Tensor,
+    ) -> Result<(Tensor, ForwardCounts), SubaccelError> {
+        let mut counts = ForwardCounts::default();
+        let mut h = x.clone();
+        for layer in &self.layers {
+            match layer {
+                PairedLayer::Sub { name, unit, act } => {
+                    let (mut out, mut c) = unit.forward_with(engine, &h)?;
+                    c.activations += act.apply(&mut out);
+                    counts.push(name, c);
+                    h = out;
+                }
+                PairedLayer::Plain(layer) => {
+                    let (out, c) = layer.forward(&h);
+                    counts.push(&layer.name, c);
+                    h = out;
+                }
+            }
+        }
+        Ok((h, counts))
+    }
+
+    /// Forward pass on the given engine, discarding counts.
+    pub fn infer_with(&self, engine: &ConvEngine, x: &Tensor) -> Result<Tensor, SubaccelError> {
+        Ok(self.forward_with(engine, x)?.0)
     }
 }
 
@@ -357,5 +465,42 @@ mod tests {
         let a = lenet5().infer(&Tensor::full(&[1, 1, 32, 32], 0.3));
         let b = lenet5().infer(&Tensor::full(&[1, 1, 32, 32], 0.3));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn paired_lenet_matches_dense_with_modified_weights() {
+        let m = lenet5();
+        let rounding = 0.15;
+        let pm = PairedModel::compile(&m, rounding);
+        assert!(pm.total_pairs() > 0, "rounding 0.15 should combine pairs");
+        assert_eq!(pm.pairs_per_conv().len(), 3);
+
+        // oracle: the dense model with snapped ("modified") weights
+        let mut snapped = m.clone();
+        for info in m.conv_layers(&[1, 1, 32, 32]) {
+            let lp = crate::accel::LayerPairing::from_weights(&info.weight, rounding);
+            snapped.set_conv_weights(&info.name, lp.modified_weights(&info.weight));
+        }
+
+        let mut rng = Rng::seed_from_u64(41);
+        let x = randt(&mut rng, &[2, 1, 32, 32], 1.0);
+        let eng = ConvEngine::new(2).unwrap();
+        let (y, counts) = pm.forward_with(&eng, &x).unwrap();
+        let (want, _) = snapped.forward(&x);
+        assert_eq!(y.shape(), want.shape());
+        assert!(y.max_abs_diff(&want) < 1e-4, "{}", y.max_abs_diff(&want));
+        // the paired path replaced muls with subs
+        let subs: u64 = counts.per_layer.iter().map(|(_, c)| c.subs).sum();
+        assert!(subs > 0);
+    }
+
+    #[test]
+    fn paired_forward_is_engine_invariant() {
+        let m = lenet5();
+        let pm = PairedModel::compile(&m, 0.1);
+        let x = Tensor::full(&[1, 1, 32, 32], 0.25);
+        let y1 = pm.infer_with(&ConvEngine::serial(), &x).unwrap();
+        let y3 = pm.infer_with(&ConvEngine::new(3).unwrap(), &x).unwrap();
+        assert_eq!(y1, y3, "thread count changed paired-model numerics");
     }
 }

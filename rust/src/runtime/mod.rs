@@ -16,7 +16,7 @@ mod lenet;
 mod paired;
 
 pub use lenet::{LeNet5Executor, Variant};
-pub use paired::{PairedLeNet5Executor, PAIRED_TABLE_SIZES};
+pub use paired::{PairedCpuLeNet5, PairedLeNet5Executor, PAIRED_TABLE_SIZES};
 
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};

@@ -1,14 +1,25 @@
-//! Executor for the fully-paired LeNet-5 artifact — the configuration
-//! where the paper's subtractor datapath *is* the served model: every
-//! conv layer of `lenet5_paired_b{B}.hlo.txt` takes runtime pairing
-//! tables (from Algorithm 1, run here in rust) instead of dense weights.
+//! Executors for the fully-paired LeNet-5 — the configuration where the
+//! paper's subtractor datapath *is* the served model.
+//!
+//! Two backends:
+//!
+//! * [`PairedLeNet5Executor`] — the PJRT artifact
+//!   (`lenet5_paired_b{B}.hlo.txt`): every conv layer takes runtime
+//!   pairing tables (from Algorithm 1, run here in rust) instead of
+//!   dense weights.
+//! * [`PairedCpuLeNet5`] — the same network on the in-process
+//!   [`ConvEngine`] (no artifact, no PJRT): conv layers run the packed
+//!   pairing through a shared multi-threaded engine, pooling/dense run
+//!   the ordinary [`crate::nn::layers`] code.
 
 use super::{tensor_to_literal, Executable, Runtime};
-use crate::accel::LayerPairing;
+use crate::accel::{ConvEngine, LayerPairing, SubConv2d};
+use crate::nn::layers::{avgpool2, dense_layer, tanh_inplace};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Fixed padded table sizes per conv layer: (weight key, Pmax, Umax).
 /// Must match `python/compile/model.py::PAIRED_TABLE_SIZES`.
@@ -120,5 +131,115 @@ impl PairedLeNet5Executor {
         refs.push(&image);
         refs.extend(self.table_literals.iter());
         self.exe.run(&refs)
+    }
+}
+
+/// Pure-CPU paired LeNet-5 on a shared [`ConvEngine`] — the artifact-free
+/// serving backend. Conv layers (c1/c3/c5) execute their packed pairing
+/// on the engine's worker pool; pooling, tanh, and the dense head reuse
+/// the [`crate::nn::layers`] kernels. Batch-size flexible (no compiled
+/// shape), so the coordinator can serve any padded batch with it.
+pub struct PairedCpuLeNet5 {
+    engine: Arc<ConvEngine>,
+    /// c1, c3, c5 compiled at the installed rounding.
+    units: Vec<SubConv2d>,
+    f6_w: Tensor,
+    f6_b: Tensor,
+    out_w: Tensor,
+    out_b: Tensor,
+    pairs_per_layer: Vec<usize>,
+    rounding: f32,
+}
+
+const CPU_CONV_KEYS: [&str; 3] = ["c1", "c3", "c5"];
+
+impl PairedCpuLeNet5 {
+    /// Build from trained weights (`weights.bin` keys, as in
+    /// `python/compile/model.py`), pairing the conv layers at `rounding`.
+    pub fn new(
+        engine: Arc<ConvEngine>,
+        weights: &HashMap<String, Tensor>,
+        rounding: f32,
+    ) -> Result<Self> {
+        let get = |k: &str| {
+            weights.get(k).cloned().with_context(|| format!("missing {k}"))
+        };
+        let mut s = Self {
+            engine,
+            units: Vec::new(),
+            f6_w: get("f6_w")?,
+            f6_b: get("f6_b")?,
+            out_w: get("out_w")?,
+            out_b: get("out_b")?,
+            pairs_per_layer: Vec::new(),
+            rounding,
+        };
+        s.install(weights, rounding)?;
+        Ok(s)
+    }
+
+    /// Re-run Algorithm 1 at a new rounding and swap in the recompiled
+    /// units. Returns total combined pairs (the variant-switch contract
+    /// shared with [`super::LeNet5Executor::install_variant`]).
+    pub fn install(&mut self, weights: &HashMap<String, Tensor>, rounding: f32) -> Result<usize> {
+        let mut units = Vec::with_capacity(CPU_CONV_KEYS.len());
+        let mut pairs_per_layer = Vec::with_capacity(CPU_CONV_KEYS.len());
+        for name in CPU_CONV_KEYS {
+            let w = weights
+                .get(&format!("{name}_w"))
+                .with_context(|| format!("missing {name}_w"))?;
+            let b = weights
+                .get(&format!("{name}_b"))
+                .with_context(|| format!("missing {name}_b"))?;
+            let unit = SubConv2d::compile(w, b, rounding);
+            pairs_per_layer.push(unit.total_pairs());
+            units.push(unit);
+        }
+        self.units = units;
+        self.pairs_per_layer = pairs_per_layer;
+        self.rounding = rounding;
+        Ok(self.total_pairs())
+    }
+
+    pub fn rounding(&self) -> f32 {
+        self.rounding
+    }
+
+    pub fn pairs_per_layer(&self) -> &[usize] {
+        &self.pairs_per_layer
+    }
+
+    pub fn total_pairs(&self) -> usize {
+        self.pairs_per_layer.iter().sum()
+    }
+
+    /// The engine this executor runs on.
+    pub fn engine(&self) -> &Arc<ConvEngine> {
+        &self.engine
+    }
+
+    /// Classify a `(B, 1, 32, 32)` batch → `(B, 10)` logits on the paired
+    /// CPU datapath (any batch size).
+    pub fn execute(&self, batch: &Tensor) -> Result<Tensor> {
+        let s = batch.shape();
+        if s.len() != 4 || s[1] != 1 || s[2] != 32 || s[3] != 32 {
+            bail!("expected (B,1,32,32) input, got {s:?}");
+        }
+        let b = s[0];
+        // c1 → tanh → s2, c3 → tanh → s4 (LeNet-5, paper Fig 2)
+        let (mut h, _) = self.units[0].forward_with(&self.engine, batch)?;
+        tanh_inplace(&mut h);
+        let mut h = avgpool2(&h);
+        let (mut h3, _) = self.units[1].forward_with(&self.engine, &h)?;
+        tanh_inplace(&mut h3);
+        h = avgpool2(&h3);
+        // c5 → tanh → flatten (B, 120)
+        let (mut h5, _) = self.units[2].forward_with(&self.engine, &h)?;
+        tanh_inplace(&mut h5);
+        let flat = h5.reshape(&[b, 120]);
+        // dense head
+        let mut f6 = dense_layer(&flat, &self.f6_w, &self.f6_b);
+        tanh_inplace(&mut f6);
+        Ok(dense_layer(&f6, &self.out_w, &self.out_b))
     }
 }

@@ -3,6 +3,14 @@
 //! ordered `(c, dy, dx)`, exactly the order `w.reshape(Cout, -1)` produces
 //! from OIHW weights. Both the dense engine and the subtractor unit index
 //! patches with the same flat weight index, so the orders must agree.
+//!
+//! Two entry points:
+//!
+//! * [`im2col`] / [`im2col_geo`] — allocate a fresh patch matrix (the
+//!   original API, kept for tests and one-shot callers).
+//! * [`im2col_into`] — write into a caller-owned buffer; the engine hot
+//!   path ([`crate::accel::ConvEngine`]) reuses one buffer across calls
+//!   so steady-state forwards do not allocate patches.
 
 use super::Tensor;
 
@@ -17,39 +25,129 @@ pub struct Im2col {
     pub k: usize,
 }
 
-/// Extract valid-convolution patches from an NCHW tensor.
+/// Geometry of a patch extraction (no data) — what [`im2col_into`]
+/// returns alongside the filled buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Im2colShape {
+    /// B·OH·OW.
+    pub rows: usize,
+    /// C·kh·kw.
+    pub k: usize,
+    pub batch: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+/// Output geometry for an NCHW input under the given kernel/stride/pad.
+/// Panics on impossible geometry (the callers treat that as a
+/// programming error, matching the engine's assert conventions).
+pub fn im2col_shape(shape: &[usize], kh: usize, kw: usize, stride: usize, pad: usize) -> Im2colShape {
+    assert_eq!(shape.len(), 4, "im2col expects NCHW, got {shape:?}");
+    assert!(stride >= 1, "stride must be >= 1");
+    let (b, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    assert!(
+        hp >= kh && wp >= kw,
+        "kernel {kh}x{kw} larger than input {h}x{w} (pad {pad})"
+    );
+    let oh = (hp - kh) / stride + 1;
+    let ow = (wp - kw) / stride + 1;
+    Im2colShape { rows: b * oh * ow, k: c * kh * kw, batch: b, out_h: oh, out_w: ow }
+}
+
+/// Extract valid-convolution patches from an NCHW tensor (stride 1).
 ///
 /// `x`: `(B, C, H, W)` → rows ordered `(b, oy, ox)`, columns ordered
 /// `(c, dy, dx)`.
 pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> Im2col {
-    let s = x.shape();
-    assert_eq!(s.len(), 4, "im2col expects NCHW, got {:?}", s);
-    let (b, c, h, w) = (s[0], s[1], s[2], s[3]);
-    assert!(h >= kh && w >= kw, "kernel {kh}x{kw} larger than input {h}x{w}");
-    let (oh, ow) = (h - kh + 1, w - kw + 1);
-    let k = c * kh * kw;
-    let rows = b * oh * ow;
-    let mut out = vec![0f32; rows * k];
+    im2col_geo(x, kh, kw, 1, 0)
+}
+
+/// [`im2col`] generalized to strided, zero-padded convolution.
+pub fn im2col_geo(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -> Im2col {
+    let mut buf = Vec::new();
+    let s = im2col_into(x, kh, kw, stride, pad, &mut buf);
+    Im2col {
+        patches: Tensor::new(&[s.rows, s.k], buf),
+        batch: s.batch,
+        out_h: s.out_h,
+        out_w: s.out_w,
+        k: s.k,
+    }
+}
+
+/// Patch extraction into a caller-owned buffer. The buffer is resized to
+/// `rows * k` and fully overwritten; reusing one buffer across calls of
+/// the same geometry performs zero allocation after the first call.
+pub fn im2col_into(
+    x: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<f32>,
+) -> Im2colShape {
+    let s = im2col_shape(x.shape(), kh, kw, stride, pad);
+    let (b, c) = (x.shape()[0], x.shape()[1]);
+    let (h, w) = (x.shape()[2], x.shape()[3]);
+    let (oh, ow) = (s.out_h, s.out_w);
+    let k = s.k;
+    out.resize(s.rows * k, 0.0);
     let xd = x.data();
 
-    for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((bi * oh + oy) * ow + ox) * k;
-                let mut col = 0;
-                for ci in 0..c {
-                    let base = ((bi * c + ci) * h + oy) * w + ox;
-                    for dy in 0..kh {
-                        let src = base + dy * w;
-                        out[row + col..row + col + kw]
-                            .copy_from_slice(&xd[src..src + kw]);
-                        col += kw;
+    if pad == 0 {
+        // Fast path: every tap is in bounds — contiguous row copies.
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = ((bi * oh + oy) * ow + ox) * k;
+                    let (iy0, ix0) = (oy * stride, ox * stride);
+                    let mut col = 0;
+                    for ci in 0..c {
+                        let base = ((bi * c + ci) * h + iy0) * w + ix0;
+                        for dy in 0..kh {
+                            let src = base + dy * w;
+                            out[row + col..row + col + kw]
+                                .copy_from_slice(&xd[src..src + kw]);
+                            col += kw;
+                        }
+                    }
+                }
+            }
+        }
+    } else {
+        // Padded path: out-of-bounds taps read as zero. Every slot is
+        // written, so a reused buffer never leaks stale values.
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = ((bi * oh + oy) * ow + ox) * k;
+                    let (iy0, ix0) = (oy * stride, ox * stride);
+                    let mut col = 0;
+                    for ci in 0..c {
+                        let base = (bi * c + ci) * h * w;
+                        for dy in 0..kh {
+                            let iy = iy0 + dy;
+                            for dx in 0..kw {
+                                let ix = ix0 + dx;
+                                out[row + col] = if iy < pad
+                                    || iy >= h + pad
+                                    || ix < pad
+                                    || ix >= w + pad
+                                {
+                                    0.0
+                                } else {
+                                    xd[base + (iy - pad) * w + (ix - pad)]
+                                };
+                                col += 1;
+                            }
+                        }
                     }
                 }
             }
         }
     }
-    Im2col { patches: Tensor::new(&[rows, k], out), batch: b, out_h: oh, out_w: ow, k }
+    s
 }
 
 #[cfg(test)]
@@ -92,5 +190,56 @@ mod tests {
     fn oversized_kernel_panics() {
         let x = Tensor::zeros(&[1, 1, 2, 2]);
         im2col(&x, 3, 3);
+    }
+
+    #[test]
+    fn stride_skips_positions() {
+        // 1x1x5x5, 3x3 kernel, stride 2 → 2x2 output grid
+        let x = Tensor::new(&[1, 1, 5, 5], (0..25).map(|v| v as f32).collect());
+        let ic = im2col_geo(&x, 3, 3, 2, 0);
+        assert_eq!((ic.out_h, ic.out_w), (2, 2));
+        // patch at (oy=0, ox=1) starts at input column 2
+        assert_eq!(&ic.patches.data()[9..12], &[2., 3., 4.]);
+        // patch at (oy=1, ox=0) starts at input row 2
+        assert_eq!(&ic.patches.data()[18..21], &[10., 11., 12.]);
+    }
+
+    #[test]
+    fn padding_reads_zeros() {
+        // 1x1x2x2, 3x3 kernel, pad 1 → 2x2 output; corner patch sees 5 zeros
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let ic = im2col_geo(&x, 3, 3, 1, 1);
+        assert_eq!((ic.out_h, ic.out_w), (2, 2));
+        // patch at (0,0): padded border on top and left
+        assert_eq!(
+            &ic.patches.data()[0..9],
+            &[0., 0., 0., 0., 1., 2., 0., 3., 4.]
+        );
+    }
+
+    #[test]
+    fn pad_stride_zero_equals_original() {
+        let x = Tensor::new(&[2, 3, 6, 5], (0..180).map(|v| v as f32 * 0.5).collect());
+        let a = im2col(&x, 3, 2);
+        let b = im2col_geo(&x, 3, 2, 1, 0);
+        assert_eq!(a.patches.data(), b.patches.data());
+        assert_eq!((a.out_h, a.out_w), (b.out_h, b.out_w));
+    }
+
+    #[test]
+    fn into_buffer_reuse_overwrites_fully() {
+        let mut buf = vec![99.0; 4];
+        let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32).collect());
+        let s = im2col_into(&x, 2, 2, 1, 0, &mut buf);
+        assert_eq!(s.rows * s.k, 16);
+        assert_eq!(buf.len(), 16);
+        let first = buf.clone();
+        // second run with a padded geometry must not leak stale values
+        let s2 = im2col_into(&x, 3, 3, 1, 1, &mut buf);
+        assert_eq!(buf.len(), s2.rows * s2.k);
+        assert_eq!(buf[0], 0.0); // padded corner
+        // and back again reproduces the first result exactly
+        im2col_into(&x, 2, 2, 1, 0, &mut buf);
+        assert_eq!(&buf[..16], &first[..]);
     }
 }

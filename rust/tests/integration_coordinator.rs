@@ -5,8 +5,9 @@
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
-use subaccel::coordinator::{Coordinator, ServeConfig};
+use subaccel::coordinator::{Backend, Coordinator, ServeConfig};
 use subaccel::data::{load_dataset, load_weights};
+use subaccel::error::SubaccelError;
 use subaccel::nn::lenet5_from_params;
 use subaccel::runtime::Variant;
 
@@ -21,15 +22,15 @@ fn artifacts_ready() -> bool {
 }
 
 fn cfg(batch: usize) -> ServeConfig {
-    ServeConfig {
-        artifacts_dir: ART.into(),
-        variant: Variant::XlaNative,
-        batch_size: batch,
-        max_wait: Duration::from_millis(1),
-        queue_cap: 256,
-        rounding: 0.0,
-        workers: 1,
-    }
+    ServeConfig::builder()
+        .artifacts_dir(ART)
+        .variant(Variant::XlaNative)
+        .batch_size(batch)
+        .max_wait(Duration::from_millis(1))
+        .queue_cap(256)
+        .workers(1)
+        .build()
+        .expect("test config is valid")
 }
 
 #[test]
@@ -76,9 +77,10 @@ fn serves_correct_results_under_concurrency() {
             assert_eq!(pred, expected[i], "request {i} diverged from oracle");
         }
     }
-    let m = coord.metrics();
-    assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), n as u64);
-    assert!(m.batches.load(std::sync::atomic::Ordering::Relaxed) >= (n / 8) as u64);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert!(snap.batches >= (n / 8) as u64);
+    assert_eq!(snap.rejected, 0);
 }
 
 #[test]
@@ -123,28 +125,49 @@ fn rejects_wrong_shape_and_applies_backpressure() {
     if !artifacts_ready() {
         return;
     }
-    let mut c = cfg(8);
-    c.queue_cap = 2;
+    // queue_cap must be >= batch_size under the validating builder, so
+    // exercise backpressure with the smallest legal queue for batch 8
+    let c = ServeConfig::builder()
+        .artifacts_dir(ART)
+        .variant(Variant::XlaNative)
+        .batch_size(8)
+        .max_wait(Duration::from_millis(1))
+        .queue_cap(8)
+        .workers(1)
+        .build()
+        .unwrap();
     let coord = Coordinator::start(c).unwrap();
-    // wrong shape fails fast
+    // wrong shape fails fast with the typed error, not a stringly one
+    let err = coord.submit(subaccel::tensor::Tensor::zeros(&[1, 1, 28, 28])).unwrap_err();
+    match err {
+        SubaccelError::BadShape { ref expected, ref got } => {
+            assert_eq!(expected, &vec![1, 1, 32, 32]);
+            assert_eq!(got, &vec![1, 1, 28, 28]);
+        }
+        other => panic!("expected BadShape, got {other}"),
+    }
+    // ... and the same error surfaces through the anyhow edge
     let err = coord.classify(subaccel::tensor::Tensor::zeros(&[1, 1, 28, 28])).unwrap_err();
-    assert!(err.to_string().contains("expected (1,1,32,32)"), "{err}");
+    assert!(err.downcast_ref::<SubaccelError>().is_some(), "{err:#}");
     // flooding a tiny queue must produce rejections (fire-and-forget)
     let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
     let mut rxs = Vec::new();
-    let mut rejected = 0;
+    let mut rejected = 0u64;
     for i in 0..64 {
         match coord.submit(ds.image32(i % ds.n)) {
             Ok(rx) => rxs.push(rx),
-            Err(_) => rejected += 1,
+            Err(e) => {
+                assert_eq!(e, SubaccelError::QueueFull, "only backpressure expected");
+                rejected += 1;
+            }
         }
     }
     // drain what was accepted
     for rx in rxs {
         let _ = rx.recv();
     }
-    let m = coord.metrics();
-    assert_eq!(m.rejected.load(std::sync::atomic::Ordering::Relaxed), rejected);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.rejected, rejected);
     coord.shutdown();
 }
 
@@ -168,8 +191,15 @@ fn replicated_workers_serve_and_switch_together() {
     if !artifacts_ready() {
         return;
     }
-    let mut c = cfg(8);
-    c.workers = 2;
+    let c = ServeConfig::builder()
+        .artifacts_dir(ART)
+        .variant(Variant::XlaNative)
+        .batch_size(8)
+        .max_wait(Duration::from_millis(1))
+        .queue_cap(256)
+        .workers(2)
+        .build()
+        .unwrap();
     let coord = Arc::new(Coordinator::start(c).unwrap());
     let ds = Arc::new(load_dataset(Path::new(ART).join("dataset.bin")).unwrap());
     let model = lenet5_from_params(&load_weights(Path::new(ART).join("weights.bin")).unwrap());
@@ -216,11 +246,67 @@ fn replicated_workers_serve_and_switch_together() {
 }
 
 #[test]
+fn cpu_engine_backend_serves_without_compiled_artifacts() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Backend::CpuEngine needs weights.bin but no .hlo.txt — and it is
+    // not restricted to the compiled batch sizes
+    let c = ServeConfig::builder()
+        .artifacts_dir(ART)
+        .backend(Backend::CpuEngine)
+        .batch_size(6)
+        .max_wait(Duration::from_millis(1))
+        .queue_cap(64)
+        .workers(1)
+        .engine_threads(2)
+        .build()
+        .unwrap();
+    let coord = Coordinator::start(c).unwrap();
+    let ds = load_dataset(Path::new(ART).join("dataset.bin")).unwrap();
+    let model = lenet5_from_params(&load_weights(Path::new(ART).join("weights.bin")).unwrap());
+    for i in 0..12 {
+        let logits = coord.classify(ds.image32(i)).unwrap();
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(j, _)| j)
+            .unwrap();
+        let oracle = model.infer(&ds.image32(i)).argmax_rows()[0];
+        assert_eq!(pred, oracle, "cpu-engine backend diverged on image {i}");
+    }
+    // live rounding switch works on the CPU backend too
+    let pairs = coord.set_rounding(0.3).unwrap();
+    assert!(pairs > 1000, "rounding 0.3 should combine heavily, got {pairs}");
+    let logits = coord.classify(ds.image32(0)).unwrap();
+    assert_eq!(logits.len(), 10);
+    coord.shutdown();
+}
+
+#[test]
 fn missing_artifacts_fail_init_cleanly() {
     let dir = subaccel::util::TempDir::new().unwrap();
-    let c = ServeConfig { artifacts_dir: dir.path().to_path_buf(), ..Default::default() };
+    let c = ServeConfig::builder().artifacts_dir(dir.path()).build().unwrap();
     match Coordinator::start(c) {
         Ok(_) => panic!("coordinator started without artifacts"),
         Err(e) => assert!(format!("{e:#}").contains("weights.bin"), "{e:#}"),
     }
+}
+
+#[test]
+fn builder_validation_is_enforced_at_the_edge() {
+    // no artifacts needed — validation happens before any thread spawns
+    let err = ServeConfig::builder().workers(0).build().unwrap_err();
+    assert!(matches!(err, SubaccelError::InvalidConfig { field: "workers", .. }), "{err}");
+    let err = ServeConfig::builder().batch_size(8).queue_cap(4).build().unwrap_err();
+    assert!(matches!(err, SubaccelError::InvalidConfig { field: "queue_cap", .. }), "{err}");
+    let err = ServeConfig::builder()
+        .backend(Backend::Pjrt(Variant::XlaNative))
+        .batch_size(7)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, SubaccelError::InvalidConfig { field: "batch_size", .. }), "{err}");
+    // the same batch size is fine on the artifact-free CPU backend
+    assert!(ServeConfig::builder().backend(Backend::CpuEngine).batch_size(7).build().is_ok());
 }

@@ -1,0 +1,127 @@
+//! Engine properties: the parallel packed-pairing engine must be
+//! *bit-identical* to the serial path across shapes, roundings, and
+//! thread counts, and the packed layout must round-trip losslessly to
+//! the per-filter pairing it was built from. No artifacts needed.
+
+use subaccel::accel::{ConvEngine, LayerPairing, PackedPairing, SubConv2d};
+use subaccel::nn::layers::conv2d;
+use subaccel::tensor::Tensor;
+use subaccel::util::{forall, Gen};
+
+const ROUNDINGS: [f32; 4] = [0.0, 0.05, 0.2, 0.5];
+
+/// Random conv problem: weights (cout, cin, kh, kw), bias, input
+/// (batch, cin, h, w) with h, w ≥ kh, kw.
+fn random_problem(g: &mut Gen) -> (Tensor, Tensor, Tensor, f32) {
+    let cin = 1 + g.rng.below(3);
+    let cout = 1 + g.rng.below(6);
+    let k = [1, 3, 5][g.rng.below(3)];
+    let h = k + g.rng.below(8);
+    let w = k + g.rng.below(8);
+    let batch = 1 + g.rng.below(3);
+    let weight = Tensor::new(&[cout, cin, k, k], g.rng.vec_normal(cout * cin * k * k));
+    let bias = Tensor::new(&[cout], g.rng.vec_normal(cout));
+    let x = Tensor::new(&[batch, cin, h, w], g.rng.vec_normal(batch * cin * h * w));
+    let rounding = ROUNDINGS[g.rng.below(ROUNDINGS.len())];
+    (weight, bias, x, rounding)
+}
+
+#[test]
+fn parallel_forward_is_bit_identical_to_serial() {
+    // Persistent engines reused across cases — this is also the steady
+    // state the pool is designed for (zero allocation after warmup).
+    let engines: Vec<ConvEngine> =
+        (1..=4).map(|t| ConvEngine::new(t).unwrap()).collect();
+    forall("engine-bit-identical", 0xE2617E, 30, |g| {
+        let (weight, bias, x, rounding) = random_problem(g);
+        let unit = SubConv2d::compile(&weight, &bias, rounding);
+        let (want, want_counts) = unit.forward(&x);
+        for engine in &engines {
+            let (out, counts) = unit
+                .forward_with(engine, &x)
+                .map_err(|e| format!("threads {}: {e}", engine.threads()))?;
+            if out != want {
+                return Err(format!(
+                    "threads {}: output diverged (max |Δ| {})",
+                    engine.threads(),
+                    out.max_abs_diff(&want)
+                ));
+            }
+            if counts != want_counts {
+                return Err(format!("threads {}: op counts diverged", engine.threads()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn strided_padded_engine_matches_dense_oracle() {
+    let engine = ConvEngine::new(3).unwrap();
+    forall("engine-geometry-oracle", 0x5EED5, 25, |g| {
+        let (weight, bias, x, rounding) = random_problem(g);
+        let stride = 1 + g.rng.below(2);
+        let pad = g.rng.below(2);
+        let unit = SubConv2d::compile_geo(&weight, &bias, rounding, stride, pad);
+        let (got, _) = unit
+            .forward_with(&engine, &x)
+            .map_err(|e| format!("engine forward: {e}"))?;
+        // oracle: dense conv over the SNAPPED weights (pairing changes
+        // the weights, not the arithmetic)
+        let snapped = LayerPairing::from_weights(&weight, rounding).modified_weights(&weight);
+        let (want, _) = conv2d(&x, &snapped, &bias, stride, pad);
+        let diff = got.max_abs_diff(&want);
+        if diff > 1e-5 {
+            return Err(format!("stride {stride} pad {pad}: max |Δ| {diff} > 1e-5"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_pairing_roundtrips_losslessly() {
+    forall("packed-roundtrip", 0xBEEF, 40, |g| {
+        let cout = 1 + g.rng.below(8);
+        let k_len = 1 + g.rng.below(60);
+        let weight = Tensor::new(&[cout, k_len, 1, 1], g.rng.vec_normal(cout * k_len));
+        let rounding = ROUNDINGS[g.rng.below(ROUNDINGS.len())];
+        let lp = LayerPairing::from_weights(&weight, rounding);
+        let back = PackedPairing::from_layer(&lp).to_layer();
+        if back.k_len != lp.k_len || back.shape != lp.shape || back.rounding != lp.rounding {
+            return Err("layer metadata changed in round-trip".into());
+        }
+        if back.filters.len() != lp.filters.len() {
+            return Err("filter count changed in round-trip".into());
+        }
+        for (c, (a, b)) in lp.filters.iter().zip(&back.filters).enumerate() {
+            if a.pair_i1 != b.pair_i1
+                || a.pair_i2 != b.pair_i2
+                || a.pair_k != b.pair_k
+                || a.unp_idx != b.unp_idx
+                || a.unp_w != b.unp_w
+            {
+                return Err(format!("filter {c} changed in round-trip"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kernel_mismatch_is_a_typed_error_not_a_panic() {
+    use subaccel::error::SubaccelError;
+    let mut g = subaccel::util::Rng::seed_from_u64(11);
+    let weight = Tensor::new(&[4, 2, 3, 3], g.vec_normal(4 * 2 * 3 * 3));
+    let bias = Tensor::zeros(&[4]);
+    let unit = SubConv2d::compile(&weight, &bias, 0.1);
+    let engine = ConvEngine::new(2).unwrap();
+    // 3 input channels but pairing was compiled for 2 → K mismatch
+    let bad = Tensor::zeros(&[1, 3, 8, 8]);
+    match unit.forward_with(&engine, &bad) {
+        Err(SubaccelError::KernelMismatch { expected_k, got_k }) => {
+            assert_eq!(expected_k, 2 * 3 * 3);
+            assert_eq!(got_k, 3 * 3 * 3);
+        }
+        other => panic!("expected KernelMismatch, got {other:?}"),
+    }
+}

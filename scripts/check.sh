@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Repo gate: build + tests + formatting + lints. Run before every push.
+#
+# Usage: scripts/check.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install the rust toolchain" >&2
+    echo "       (rustup.rs, or your distro's rustc+cargo packages)" >&2
+    exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy -- -D warnings
+
+echo "== all checks passed =="
