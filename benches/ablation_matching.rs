@@ -11,6 +11,7 @@ use subaccel::accel::{
 use subaccel::data::{load_dataset, load_weights};
 use subaccel::nn::lenet5_from_params;
 use subaccel::tensor::Tensor;
+use subaccel::util::bench_smoke;
 
 fn main() {
     let Ok(weights) = load_weights("artifacts/weights.bin") else {
@@ -20,7 +21,7 @@ fn main() {
     let ds = load_dataset("artifacts/dataset.bin").expect("dataset");
     let model = lenet5_from_params(&weights);
     let infos = model.conv_layers(&[1, 1, 32, 32]);
-    let n = 300.min(ds.n);
+    let n = if bench_smoke() { 20 } else { 300 }.min(ds.n);
 
     println!("# pairing-policy ablation (two-pointer = paper Algorithm 1)");
     println!(

@@ -14,7 +14,7 @@
 use subaccel::accel::{ConvEngine, SubConv2d};
 use subaccel::data::load_weights;
 use subaccel::nn::layers::conv2d;
-use subaccel::nn::lenet5_from_params;
+use subaccel::nn::{lenet5, lenet5_from_params, PairedModel};
 use subaccel::runtime::{LeNet5Executor, Runtime, Variant};
 use subaccel::tensor::Tensor;
 use subaccel::util::{bench, bench_header, Rng};
@@ -70,6 +70,33 @@ fn main() {
             let diff = got.max_abs_diff(&want);
             assert!(diff <= 1e-5, "engine t={t} diverged from serial: max |Δ| {diff}");
         }
+    }
+
+    // --- whole-network plan executor (zero-alloc steady state) ----------
+    let m = lenet5();
+    let pm = PairedModel::compile(&m, 0.05);
+    let plan = pm.compiled().plan(&[8, 1, 32, 32]).expect("plan");
+    let mut exe = plan.into_executor();
+    exe.warm();
+    let xb = Tensor::new(&[8, 1, 32, 32], rng.vec_range(8 * 1024, 0.0, 1.0));
+    println!("\n# whole-network plan executor, lenet5 b8 (rounding 0.05)");
+    let mut out = Vec::new();
+    let r = bench("lenet5 plan forward_into b8 t=1", 3, 30, || {
+        exe.forward_into(&e1, &xb, &mut out).expect("plan forward");
+        out.len()
+    });
+    println!("{}", r.report());
+    let rn = bench(&format!("lenet5 plan forward_into b8 t={n_threads}"), 3, 30, || {
+        exe.forward_into(&en, &xb, &mut out).expect("plan forward");
+        out.len()
+    });
+    println!("{}", rn.report());
+    // correctness gate: the warm plan path is bit-identical to the
+    // PairedModel cache path, on both engines
+    for eng in [&e1, &en] {
+        let want = pm.infer_with(eng, &xb).expect("paired forward");
+        let got = exe.infer(eng, &xb).expect("plan infer");
+        assert_eq!(got, want, "plan executor diverged from PairedModel");
     }
 
     // --- whole-model paths ----------------------------------------------

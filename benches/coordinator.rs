@@ -10,8 +10,10 @@ use std::time::{Duration, Instant};
 use subaccel::coordinator::{Backend, Coordinator, ServeConfig};
 use subaccel::data::{load_dataset, load_weights};
 use subaccel::runtime::{LeNet5Executor, Runtime, Variant};
+use subaccel::util::bench_smoke;
 
 fn main() {
+    let smoke = bench_smoke();
     let Ok(weights) = load_weights("artifacts/weights.bin") else {
         println!("SKIP: run `make artifacts` first");
         return;
@@ -26,10 +28,10 @@ fn main() {
             .expect("load artifact");
         let input = ds.batch32(0, batch);
         // warmup
-        for _ in 0..3 {
+        for _ in 0..if smoke { 1 } else { 3 } {
             exe.execute(&input).unwrap();
         }
-        let iters = 200 / batch.max(1) + 10;
+        let iters = if smoke { 1 } else { 200 / batch.max(1) + 10 };
         let t0 = Instant::now();
         for _ in 0..iters {
             exe.execute(&input).unwrap();
@@ -53,7 +55,8 @@ fn main() {
             "batch", "clients", "req/s", "mean_batch", "e2e_p50", "e2e_p99", "exec_mean"
         );
         for &batch in batches {
-            for clients in [1usize, 8, 64] {
+            for clients in if smoke { &[8usize][..] } else { &[1usize, 8, 64][..] } {
+                let clients = *clients;
                 let cfg = ServeConfig::builder()
                     .artifacts_dir("artifacts")
                     .backend(backend)
@@ -62,7 +65,7 @@ fn main() {
                     .build()
                     .expect("bench config");
                 let coord = Arc::new(Coordinator::start(cfg).expect("start"));
-                let per_client = 400 / clients;
+                let per_client = if smoke { 16 } else { 400 } / clients;
                 let t0 = Instant::now();
                 let handles: Vec<_> = (0..clients)
                     .map(|c| {

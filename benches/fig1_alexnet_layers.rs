@@ -13,12 +13,12 @@
 use subaccel::accel::{ConvEngine, SubConv2d};
 use subaccel::nn::{alexnet, LayerKind};
 use subaccel::tensor::Tensor;
-use subaccel::util::{bench, bench_header};
+use subaccel::util::{bench, bench_header, bench_smoke};
 
 fn main() {
     let m = alexnet();
     let x = Tensor::zeros(&[1, 3, 227, 227]);
-    let reps = 3;
+    let reps = if bench_smoke() { 1 } else { 3 };
 
     let mut acc: Vec<(String, f64, u64)> = Vec::new();
     for _ in 0..reps {

@@ -12,6 +12,7 @@ use subaccel::accel::{model_op_sweep, LayerPairing, TABLE1_ROUNDINGS};
 use subaccel::data::{load_dataset, load_weights};
 use subaccel::hw::{savings_report, CostModel, PeArrayConfig, PeArraySim};
 use subaccel::nn::lenet5_from_params;
+use subaccel::util::bench_smoke;
 
 fn main() {
     let weights = match load_weights("artifacts/weights.bin") {
@@ -25,7 +26,7 @@ fn main() {
     let model = lenet5_from_params(&weights);
     let rows = model_op_sweep(&model, &[1, 1, 32, 32], &TABLE1_ROUNDINGS);
     let baseline = &rows[0];
-    let n = 500.min(ds.n);
+    let n = if bench_smoke() { 20 } else { 500 }.min(ds.n);
 
     let base_acc = accuracy(&model, &ds, n, 0.0);
     println!("# Fig 8 — accuracy vs savings ({n} images; baseline accuracy {:.2}%)", base_acc * 100.0);

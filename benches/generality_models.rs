@@ -9,6 +9,7 @@
 use subaccel::accel::{model_ops, WeightStats};
 use subaccel::hw::{savings_report, CostModel};
 use subaccel::nn::{alexnet, lenet5, vgg_small, Model};
+use subaccel::util::bench_smoke;
 
 fn main() {
     let cost = CostModel::ieee754_f32();
@@ -32,7 +33,8 @@ fn main() {
             "rounding", "macs", "subs", "power_sav%", "area_sav%"
         );
         let base = model_ops(model, input, 0.0);
-        for &r in &[0.001f32, 0.005, 0.02, 0.05] {
+        let roundings: &[f32] = if bench_smoke() { &[0.05] } else { &[0.001, 0.005, 0.02, 0.05] };
+        for &r in roundings {
             let row = model_ops(model, input, r);
             let s = savings_report(&cost, &base, &row);
             println!(

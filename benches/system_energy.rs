@@ -18,6 +18,7 @@ use subaccel::hw::{
 use subaccel::nn::layers::{avgpool2, dense_layer, tanh_inplace};
 use subaccel::nn::lenet5_from_params;
 use subaccel::tensor::Tensor;
+use subaccel::util::bench_smoke;
 
 fn main() {
     let Ok(weights) = load_weights("artifacts/weights.bin") else {
@@ -71,7 +72,7 @@ fn main() {
         "{:>9} {:>12} {:>11} {:>14}",
         "rounding", "power_sav%", "area_sav%", "int8_accuracy%"
     );
-    let n = 200.min(ds.n);
+    let n = if bench_smoke() { 20 } else { 200 }.min(ds.n);
     for &r in &[0.0f32, 0.01, 0.05, 0.1, 0.2] {
         let row = rows
             .iter()

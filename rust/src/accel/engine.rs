@@ -15,7 +15,9 @@
 //!   thread+channel design) that shards im2col rows across cores. The
 //!   engine owns reusable scratch buffers, so a steady-state
 //!   [`ConvEngine::forward_packed_into`] call performs **zero heap
-//!   allocation**.
+//!   allocation**. [`ConvEngine::forward_packed_slice_into`] is the same
+//!   path on raw activation slices, for the whole-network plans in
+//!   [`crate::exec`].
 //!
 //! Numerics: every shard runs the same [`compute_rows`] kernel in the
 //! same iteration order, and Rust f32 arithmetic is strict — so the
@@ -30,7 +32,7 @@ use std::thread::JoinHandle;
 use super::preprocess::{FilterPairing, LayerPairing};
 use crate::error::SubaccelError;
 use crate::nn::OpCounts;
-use crate::tensor::{im2col_into, Tensor};
+use crate::tensor::{im2col_slice_into, Tensor};
 
 /// Spatial geometry of a conv layer (everything [`ConvEngine`] needs
 /// beyond the pairing itself).
@@ -315,11 +317,36 @@ impl ConvEngine {
         x: &Tensor,
         out: &mut Vec<f32>,
     ) -> Result<(ConvOutShape, OpCounts), SubaccelError> {
+        self.forward_packed_slice_into(packed, bias, geo, x.data(), x.shape(), out)
+    }
+
+    /// [`ConvEngine::forward_packed_into`] on a raw NCHW activation
+    /// slice — the [`crate::exec`] executor's entry point. Whole-network
+    /// plans keep activations in reusable ping-pong scratch rather than
+    /// `Tensor`s, so no tensor handle (whose shape vector would
+    /// allocate) exists on the steady-state path.
+    pub fn forward_packed_slice_into(
+        &self,
+        packed: &PackedPairing,
+        bias: &[f32],
+        geo: ConvGeometry,
+        xd: &[f32],
+        xshape: &[usize],
+        out: &mut Vec<f32>,
+    ) -> Result<(ConvOutShape, OpCounts), SubaccelError> {
         assert_eq!(bias.len(), packed.cout, "bias length != Cout");
         let inner = &mut *self.inner.lock().expect("engine lock");
         let Inner { scratch, pool } = inner;
 
-        let s = im2col_into(x, geo.kh, geo.kw, geo.stride, geo.pad, &mut scratch.patches);
+        let s = im2col_slice_into(
+            xd,
+            xshape,
+            geo.kh,
+            geo.kw,
+            geo.stride,
+            geo.pad,
+            &mut scratch.patches,
+        );
         if s.k != packed.k_len {
             return Err(SubaccelError::KernelMismatch {
                 expected_k: packed.k_len,

@@ -98,4 +98,32 @@ mod tests {
     fn zero_batch_rejected() {
         Batcher::new(0, Duration::ZERO);
     }
+
+    #[test]
+    fn overfull_queue_flushes_even_when_fresh() {
+        // pending > max_batch must flush regardless of age — even with no
+        // oldest timestamp at all (the size test runs before the deadline
+        // test, so a missing timestamp cannot delay an overfull queue).
+        let now = Instant::now();
+        assert_eq!(b().decide(5, Some(now), now), BatchPlan::Flush);
+        assert_eq!(b().decide(5, None, now), BatchPlan::Flush);
+    }
+
+    #[test]
+    fn just_under_deadline_waits() {
+        // the boundary is >= max_wait: one nanosecond short still waits
+        let t0 = Instant::now();
+        let almost = t0 + Duration::from_millis(10) - Duration::from_nanos(1);
+        assert_eq!(b().decide(1, Some(t0), almost), BatchPlan::Wait);
+    }
+
+    #[test]
+    fn zero_wait_flushes_any_nonempty_queue() {
+        // max_wait == 0 degenerates to flush-on-arrival, but an empty
+        // queue must still wait
+        let z = Batcher::new(4, Duration::ZERO);
+        let now = Instant::now();
+        assert_eq!(z.decide(1, Some(now), now), BatchPlan::Flush);
+        assert_eq!(z.decide(0, None, now), BatchPlan::Wait);
+    }
 }

@@ -379,7 +379,7 @@ enum WorkerExec {
 }
 
 impl WorkerExec {
-    fn execute(&self, images: &Tensor) -> Result<Tensor> {
+    fn execute(&mut self, images: &Tensor) -> Result<Tensor> {
         match self {
             WorkerExec::Pjrt(e) => e.execute(images),
             WorkerExec::Cpu(e) => e.execute(images),
@@ -429,7 +429,11 @@ fn worker_loop(
             }
             Backend::CpuEngine => {
                 let engine = Arc::new(ConvEngine::new(cfg.engine_threads)?);
-                WorkerExec::Cpu(PairedCpuLeNet5::new(engine, &base, cfg.rounding)?)
+                let mut cpu = PairedCpuLeNet5::new(engine, &base, cfg.rounding)?;
+                // one warmed plan per replica, keyed by the serving batch
+                // size: the first real batch already runs allocation-free
+                cpu.warm(cfg.batch_size)?;
+                WorkerExec::Cpu(cpu)
             }
         };
         Ok((exec, base))

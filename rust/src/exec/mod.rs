@@ -1,0 +1,136 @@
+//! Plan/execute split for whole-network paired inference.
+//!
+//! The paper's premise is *pay once, serve cheap*: Algorithm 1 sorts,
+//! pairs, and rounds conv weights ahead of time so the steady-state
+//! inference loop runs on subtractors. This module applies the same
+//! discipline to the software stack, in two compile stages and one
+//! executor:
+//!
+//! 1. [`CompiledNet`] — shape-independent. Runs Algorithm 1 once per
+//!    conv layer ([`SubConv2d`] → [`crate::accel::PackedPairing`]) and
+//!    snapshots the dense layers. Compile this once per (model,
+//!    rounding); it is cheap to clone (weights and pairings sit behind
+//!    `Arc`s).
+//! 2. [`ExecutionPlan`] — shape-resolved. [`CompiledNet::plan`] walks
+//!    the layer graph for a concrete input shape, checks every
+//!    geometry up front (typed [`SubaccelError`]s instead of
+//!    mid-forward panics), precomputes each step's output shape and
+//!    static [`OpCounts`], and sizes the scratch arena.
+//! 3. [`PlanExecutor`] — owns two ping-pong activation buffers sized by
+//!    the plan. Its `forward_into` runs the whole network on a shared
+//!    [`crate::accel::ConvEngine`] with **zero steady-state heap
+//!    allocations** (proved by `rust/tests/alloc_plan.rs`).
+//!
+//! All three serving paths — [`crate::nn::PairedModel`],
+//! [`crate::runtime::PairedCpuLeNet5`], and the coordinator's
+//! `Backend::CpuEngine` replicas — route through this one executor, so
+//! they are bit-identical by construction (property-tested in
+//! `rust/tests/prop_plan.rs`).
+
+mod plan;
+
+pub use plan::{ExecutionPlan, PlanExecutor, PlanStep};
+
+use std::sync::Arc;
+
+use crate::accel::SubConv2d;
+use crate::error::SubaccelError;
+use crate::nn::layers::{Activation, LayerKind};
+use crate::nn::Model;
+use crate::tensor::Tensor;
+
+/// Stage 1: a [`Model`] with every conv layer preprocessed by
+/// Algorithm 1 at a fixed rounding size. Shape-independent — one
+/// `CompiledNet` serves any batch size or spatial geometry via
+/// [`CompiledNet::plan`].
+#[derive(Debug, Clone)]
+pub struct CompiledNet {
+    name: String,
+    rounding: f32,
+    layers: Vec<CompiledLayer>,
+}
+
+/// One shape-independent compiled layer. Weights and pairings are
+/// `Arc`-shared so plans clone handles, not buffers.
+#[derive(Debug, Clone)]
+enum CompiledLayer {
+    /// Conv on the paired subtractor datapath.
+    Conv { name: String, unit: Arc<SubConv2d>, act: Activation },
+    AvgPool { name: String, k: usize, act: Activation },
+    MaxPool { name: String, k: usize, stride: usize, act: Activation },
+    Flatten { name: String, act: Activation },
+    Dense { name: String, weight: Arc<Tensor>, bias: Arc<Tensor>, act: Activation },
+}
+
+impl CompiledNet {
+    /// Run Algorithm 1 over every conv layer of `model` at the given
+    /// rounding size. This is the expensive step (sorting weights);
+    /// everything downstream reuses its output.
+    pub fn compile(model: &Model, rounding: f32) -> Self {
+        let layers = model
+            .layers
+            .iter()
+            .map(|layer| {
+                let name = layer.name.clone();
+                match &layer.kind {
+                    LayerKind::Conv2d { weight, bias, stride, pad } => {
+                        let unit = SubConv2d::compile_geo(weight, bias, rounding, *stride, *pad);
+                        CompiledLayer::Conv { name, unit: Arc::new(unit), act: layer.act }
+                    }
+                    LayerKind::AvgPool { k } => {
+                        CompiledLayer::AvgPool { name, k: *k, act: layer.act }
+                    }
+                    LayerKind::MaxPool { k, stride } => {
+                        CompiledLayer::MaxPool { name, k: *k, stride: *stride, act: layer.act }
+                    }
+                    LayerKind::Flatten => CompiledLayer::Flatten { name, act: layer.act },
+                    LayerKind::Dense { weight, bias } => CompiledLayer::Dense {
+                        name,
+                        weight: Arc::new(weight.clone()),
+                        bias: Arc::new(bias.clone()),
+                        act: layer.act,
+                    },
+                }
+            })
+            .collect();
+        Self { name: model.name.clone(), rounding, layers }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn rounding(&self) -> f32 {
+        self.rounding
+    }
+
+    /// Total combined pairs across all conv layers.
+    pub fn total_pairs(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                CompiledLayer::Conv { unit, .. } => unit.total_pairs(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Per-conv-layer pair counts `(name, pairs)`.
+    pub fn pairs_per_conv(&self) -> Vec<(String, usize)> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                CompiledLayer::Conv { name, unit, .. } => Some((name.clone(), unit.total_pairs())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Stage 2: resolve all layer geometry for a concrete input shape.
+    /// Cheap (shape arithmetic + `Arc` clones); errors are typed —
+    /// [`SubaccelError::InvalidConfig`] for impossible geometry,
+    /// [`SubaccelError::KernelMismatch`] for channel/kernel disagreement.
+    pub fn plan(&self, input: &[usize]) -> Result<ExecutionPlan, SubaccelError> {
+        ExecutionPlan::from_net(self, input)
+    }
+}

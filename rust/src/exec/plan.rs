@@ -1,0 +1,529 @@
+//! Stage 2 + 3 of the plan/execute split: geometry-resolved
+//! [`ExecutionPlan`]s and the zero-alloc [`PlanExecutor`].
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{CompiledLayer, CompiledNet};
+use crate::accel::{ConvEngine, SubConv2d};
+use crate::error::SubaccelError;
+use crate::nn::layers::{avgpool_into, dense_into, maxpool_into, Activation};
+use crate::nn::{ForwardCounts, Model, OpCounts};
+use crate::tensor::Tensor;
+
+fn bad_input(reason: String) -> SubaccelError {
+    SubaccelError::InvalidConfig { field: "input_shape", reason }
+}
+
+fn dims4(shape: &[usize], layer: &str) -> Result<[usize; 4], SubaccelError> {
+    match *shape {
+        [b, c, h, w] => Ok([b, c, h, w]),
+        _ => Err(bad_input(format!("layer {layer} expects NCHW input, got {shape:?}"))),
+    }
+}
+
+fn act_elems(act: Activation, n: usize) -> u64 {
+    if act == Activation::None {
+        0
+    } else {
+        n as u64
+    }
+}
+
+/// One geometry-resolved step of an [`ExecutionPlan`]: the op to run,
+/// its input/output shapes, and its statically known [`OpCounts`].
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    name: String,
+    in_shape: Vec<usize>,
+    out_shape: Vec<usize>,
+    counts: OpCounts,
+    op: StepOp,
+}
+
+impl PlanStep {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn in_shape(&self) -> &[usize] {
+        &self.in_shape
+    }
+
+    pub fn out_shape(&self) -> &[usize] {
+        &self.out_shape
+    }
+
+    /// Op counts for this step, known at plan-compile time (activation
+    /// included) — identical to what the dynamic per-layer path counted.
+    pub fn counts(&self) -> OpCounts {
+        self.counts
+    }
+}
+
+#[derive(Debug, Clone)]
+enum StepOp {
+    PairedConv { unit: Arc<SubConv2d>, act: Activation },
+    AvgPool { k: usize, act: Activation },
+    MaxPool { k: usize, stride: usize, act: Activation },
+    /// Pure NCHW → (N, C·H·W) relabel: row-major layout is unchanged, so
+    /// the executor moves no data for this step.
+    Reshape { act: Activation },
+    Dense { weight: Arc<Tensor>, bias: Arc<Tensor>, act: Activation },
+}
+
+/// A [`CompiledNet`] resolved against one concrete input shape: every
+/// step's geometry validated, output shape and op counts precomputed,
+/// scratch arena sized. Turn it into a runnable [`PlanExecutor`] with
+/// [`ExecutionPlan::into_executor`].
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    name: String,
+    rounding: f32,
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+    steps: Vec<PlanStep>,
+    /// Largest activation buffer (elements) any step reads or writes —
+    /// the size of each ping-pong scratch buffer.
+    max_elems: usize,
+}
+
+impl ExecutionPlan {
+    /// One-shot convenience: Algorithm 1 + geometry resolution in a
+    /// single call. Prefer compiling a [`CompiledNet`] once and planning
+    /// it per shape when serving multiple batch sizes.
+    pub fn compile(model: &Model, rounding: f32, input: &[usize]) -> Result<Self, SubaccelError> {
+        CompiledNet::compile(model, rounding).plan(input)
+    }
+
+    pub(super) fn from_net(net: &CompiledNet, input: &[usize]) -> Result<Self, SubaccelError> {
+        let mut shape = input.to_vec();
+        let mut max_elems: usize = shape.iter().product();
+        let mut steps = Vec::with_capacity(net.layers.len());
+        for layer in &net.layers {
+            let in_shape = shape.clone();
+            let (name, out_shape, counts, op) = match layer {
+                CompiledLayer::Conv { name, unit, act } => {
+                    let [b, c, h, w] = dims4(&in_shape, name)?;
+                    let geo = unit.geometry();
+                    let packed = unit.packed();
+                    let (hp, wp) = (h + 2 * geo.pad, w + 2 * geo.pad);
+                    if hp < geo.kh || wp < geo.kw {
+                        return Err(bad_input(format!(
+                            "layer {name}: kernel {}x{} larger than padded input {h}x{w}",
+                            geo.kh, geo.kw
+                        )));
+                    }
+                    let k = c * geo.kh * geo.kw;
+                    if k != packed.k_len() {
+                        return Err(SubaccelError::KernelMismatch {
+                            expected_k: packed.k_len(),
+                            got_k: k,
+                        });
+                    }
+                    let oh = (hp - geo.kh) / geo.stride + 1;
+                    let ow = (wp - geo.kw) / geo.stride + 1;
+                    let cout = packed.cout();
+                    let rows = (b * oh * ow) as u64;
+                    let mut counts = OpCounts::paired_layer(
+                        packed.total_pairs() as u64,
+                        packed.total_unpaired() as u64,
+                        rows,
+                        rows * cout as u64,
+                    );
+                    counts.activations += act_elems(*act, b * cout * oh * ow);
+                    let op = StepOp::PairedConv { unit: unit.clone(), act: *act };
+                    (name, vec![b, cout, oh, ow], counts, op)
+                }
+                CompiledLayer::AvgPool { name, k, act } => {
+                    let [b, c, h, w] = dims4(&in_shape, name)?;
+                    let k = *k;
+                    if h % k != 0 || w % k != 0 {
+                        return Err(bad_input(format!("layer {name}: avgpool {k} on {h}x{w}")));
+                    }
+                    let (oh, ow) = (h / k, w / k);
+                    let out = b * c * oh * ow;
+                    let mut counts = OpCounts {
+                        adds: (out * (k * k - 1)) as u64,
+                        muls: out as u64,
+                        ..Default::default()
+                    };
+                    counts.activations += act_elems(*act, out);
+                    (name, vec![b, c, oh, ow], counts, StepOp::AvgPool { k, act: *act })
+                }
+                CompiledLayer::MaxPool { name, k, stride, act } => {
+                    let [b, c, h, w] = dims4(&in_shape, name)?;
+                    let (k, stride) = (*k, *stride);
+                    if h < k || w < k {
+                        return Err(bad_input(format!("layer {name}: maxpool {k} on {h}x{w}")));
+                    }
+                    let oh = (h - k) / stride + 1;
+                    let ow = (w - k) / stride + 1;
+                    let mut counts = OpCounts::default();
+                    counts.activations += act_elems(*act, b * c * oh * ow);
+                    let op = StepOp::MaxPool { k, stride, act: *act };
+                    (name, vec![b, c, oh, ow], counts, op)
+                }
+                CompiledLayer::Flatten { name, act } => {
+                    if in_shape.is_empty() {
+                        return Err(bad_input(format!("layer {name}: flatten of scalar input")));
+                    }
+                    let rest: usize = in_shape[1..].iter().product();
+                    let mut counts = OpCounts::default();
+                    counts.activations += act_elems(*act, in_shape[0] * rest);
+                    let out_shape = vec![in_shape[0], rest];
+                    (name, out_shape, counts, StepOp::Reshape { act: *act })
+                }
+                CompiledLayer::Dense { name, weight, bias, act } => {
+                    let (bs, nin) = match in_shape[..] {
+                        [bs, nin] => (bs, nin),
+                        _ => {
+                            return Err(bad_input(format!(
+                                "layer {name} expects (B, In) input, got {in_shape:?}"
+                            )))
+                        }
+                    };
+                    let (nout, win) = (weight.shape()[0], weight.shape()[1]);
+                    if nin != win {
+                        return Err(bad_input(format!(
+                            "layer {name}: dense in-features {nin} vs weight {win}"
+                        )));
+                    }
+                    let mut counts = OpCounts::dense_layer(
+                        (nout * win) as u64,
+                        bs as u64,
+                        (bs * nout) as u64,
+                    );
+                    counts.activations += act_elems(*act, bs * nout);
+                    let op = StepOp::Dense {
+                        weight: weight.clone(),
+                        bias: bias.clone(),
+                        act: *act,
+                    };
+                    (name, vec![bs, nout], counts, op)
+                }
+            };
+            max_elems = max_elems.max(out_shape.iter().product());
+            steps.push(PlanStep {
+                name: name.clone(),
+                in_shape,
+                out_shape: out_shape.clone(),
+                counts,
+                op,
+            });
+            shape = out_shape;
+        }
+        Ok(Self {
+            name: net.name().to_string(),
+            rounding: net.rounding(),
+            input_shape: input.to_vec(),
+            output_shape: shape,
+            steps,
+            max_elems,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn rounding(&self) -> f32 {
+        self.rounding
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.output_shape
+    }
+
+    /// Batch size the plan was resolved for.
+    pub fn batch(&self) -> usize {
+        self.input_shape.first().copied().unwrap_or(0)
+    }
+
+    pub fn steps(&self) -> &[PlanStep] {
+        &self.steps
+    }
+
+    /// Elements in each of the executor's two scratch buffers.
+    pub fn scratch_elems(&self) -> usize {
+        self.max_elems
+    }
+
+    /// Total combined pairs across the plan's conv steps.
+    pub fn total_pairs(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match &s.op {
+                StepOp::PairedConv { unit, .. } => unit.total_pairs(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// The whole pass's per-layer op accounting — statically known, so
+    /// executors return it without counting anything at run time.
+    pub fn counts(&self) -> ForwardCounts {
+        let mut fc = ForwardCounts::default();
+        for s in &self.steps {
+            fc.push(&s.name, s.counts);
+        }
+        fc
+    }
+
+    /// Stage 3: attach ping-pong scratch buffers, producing a runnable
+    /// executor.
+    pub fn into_executor(self) -> PlanExecutor {
+        PlanExecutor { plan: self, cur: Vec::new(), spare: Vec::new() }
+    }
+}
+
+/// Runs an [`ExecutionPlan`] over a shared [`ConvEngine`], reusing two
+/// ping-pong activation buffers across steps and across calls: after the
+/// first (warm-up) forward, `forward_into` performs **zero** heap
+/// allocations (`rust/tests/alloc_plan.rs` counts them).
+///
+/// Not `Sync` by design — an executor is the per-replica mutable state;
+/// share the engine, not the executor.
+#[derive(Debug, Clone)]
+pub struct PlanExecutor {
+    plan: ExecutionPlan,
+    cur: Vec<f32>,
+    spare: Vec<f32>,
+}
+
+impl PlanExecutor {
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// Pre-grow both scratch buffers to the plan's arena size, so even
+    /// the first forward performs no activation-buffer growth. (The
+    /// engine's own im2col scratch still warms on the first call through
+    /// a given [`ConvEngine`].)
+    pub fn warm(&mut self) {
+        let n = self.plan.max_elems;
+        self.cur.resize(n, 0.0);
+        self.spare.resize(n, 0.0);
+    }
+
+    /// Run the whole network, writing logits into `out` (resized and
+    /// fully overwritten); returns the output shape. Steady-state
+    /// allocation-free once `out` and the scratch buffers are warm.
+    pub fn forward_into(
+        &mut self,
+        engine: &ConvEngine,
+        x: &Tensor,
+        out: &mut Vec<f32>,
+    ) -> Result<&[usize], SubaccelError> {
+        self.run_steps(engine, x, |_, _| {})?;
+        out.clear();
+        out.extend_from_slice(&self.cur);
+        Ok(&self.plan.output_shape)
+    }
+
+    /// Run the plan and allocate the result tensor plus the (static)
+    /// per-layer counts — the drop-in equivalent of the old dynamic
+    /// `PairedModel::forward_with`.
+    pub fn forward(
+        &mut self,
+        engine: &ConvEngine,
+        x: &Tensor,
+    ) -> Result<(Tensor, ForwardCounts), SubaccelError> {
+        let y = self.infer(engine, x)?;
+        Ok((y, self.plan.counts()))
+    }
+
+    /// Run the plan, allocating only the result tensor.
+    pub fn infer(&mut self, engine: &ConvEngine, x: &Tensor) -> Result<Tensor, SubaccelError> {
+        self.run_steps(engine, x, |_, _| {})?;
+        Ok(Tensor::new(&self.plan.output_shape, self.cur.clone()))
+    }
+
+    /// Per-step wall-clock profile `(name, seconds, counts)` — the
+    /// plan-level instrumentation hook behind the Fig-1 style
+    /// measurements. Counts are the plan's static ones.
+    pub fn profile(
+        &mut self,
+        engine: &ConvEngine,
+        x: &Tensor,
+    ) -> Result<Vec<(String, f64, OpCounts)>, SubaccelError> {
+        let mut secs = vec![0.0f64; self.plan.steps.len()];
+        self.run_steps(engine, x, |i, s| secs[i] = s)?;
+        Ok(self
+            .plan
+            .steps
+            .iter()
+            .zip(secs)
+            .map(|(st, s)| (st.name.clone(), s, st.counts))
+            .collect())
+    }
+
+    /// The shared step loop. `tick` observes `(step index, seconds)` —
+    /// a no-op closure for plain forwards, a recorder for `profile`.
+    fn run_steps(
+        &mut self,
+        engine: &ConvEngine,
+        x: &Tensor,
+        mut tick: impl FnMut(usize, f64),
+    ) -> Result<(), SubaccelError> {
+        if x.shape() != self.plan.input_shape.as_slice() {
+            return Err(SubaccelError::BadShape {
+                expected: self.plan.input_shape.clone(),
+                got: x.shape().to_vec(),
+            });
+        }
+        self.cur.clear();
+        self.cur.extend_from_slice(x.data());
+        for (i, step) in self.plan.steps.iter().enumerate() {
+            let t0 = Instant::now();
+            match &step.op {
+                StepOp::PairedConv { unit, act } => {
+                    engine.forward_packed_slice_into(
+                        unit.packed(),
+                        unit.bias().data(),
+                        unit.geometry(),
+                        &self.cur,
+                        &step.in_shape,
+                        &mut self.spare,
+                    )?;
+                    act.apply_slice(&mut self.spare);
+                    std::mem::swap(&mut self.cur, &mut self.spare);
+                }
+                StepOp::AvgPool { k, act } => {
+                    avgpool_into(&self.cur, &step.in_shape, *k, &mut self.spare);
+                    act.apply_slice(&mut self.spare);
+                    std::mem::swap(&mut self.cur, &mut self.spare);
+                }
+                StepOp::MaxPool { k, stride, act } => {
+                    maxpool_into(&self.cur, &step.in_shape, *k, *stride, &mut self.spare);
+                    act.apply_slice(&mut self.spare);
+                    std::mem::swap(&mut self.cur, &mut self.spare);
+                }
+                StepOp::Reshape { act } => {
+                    // relabel only — data stays in place
+                    act.apply_slice(&mut self.cur);
+                }
+                StepOp::Dense { weight, bias, act } => {
+                    dense_into(
+                        &self.cur,
+                        &step.in_shape,
+                        weight.data(),
+                        weight.shape(),
+                        bias.data(),
+                        &mut self.spare,
+                    );
+                    act.apply_slice(&mut self.spare);
+                    std::mem::swap(&mut self.cur, &mut self.spare);
+                }
+            }
+            tick(i, t0.elapsed().as_secs_f64());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{alexnet, lenet5};
+    use crate::util::Rng;
+
+    fn randt(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect())
+    }
+
+    #[test]
+    fn lenet_plan_resolves_shapes_and_scratch() {
+        let plan = ExecutionPlan::compile(&lenet5(), 0.1, &[2, 1, 32, 32]).unwrap();
+        assert_eq!(plan.batch(), 2);
+        assert_eq!(plan.output_shape(), &[2, 10]);
+        assert_eq!(plan.steps().len(), 8);
+        let shapes: Vec<&[usize]> = plan.steps().iter().map(|s| s.out_shape()).collect();
+        assert_eq!(shapes[0], &[2, 6, 28, 28]);
+        assert_eq!(shapes[4], &[2, 120, 1, 1]);
+        assert_eq!(shapes[5], &[2, 120]);
+        // scratch must fit the biggest activation (c1 output here)
+        assert_eq!(plan.scratch_elems(), 2 * 6 * 28 * 28);
+        assert!(plan.total_pairs() > 0);
+    }
+
+    #[test]
+    fn static_counts_match_dynamic_dense_counts_at_zero_rounding() {
+        // at rounding 0 nothing pairs, so paired counts == dense counts
+        let m = lenet5();
+        let plan = ExecutionPlan::compile(&m, 0.0, &[1, 1, 32, 32]).unwrap();
+        let (_, dynamic) = m.forward(&Tensor::full(&[1, 1, 32, 32], 0.2));
+        let static_counts = plan.counts();
+        assert_eq!(static_counts.per_layer.len(), dynamic.per_layer.len());
+        assert_eq!(static_counts, dynamic);
+    }
+
+    #[test]
+    fn executor_reuses_buffers_across_inputs() {
+        let mut rng = Rng::seed_from_u64(11);
+        let mut exec =
+            ExecutionPlan::compile(&lenet5(), 0.08, &[1, 1, 32, 32]).unwrap().into_executor();
+        let engine = ConvEngine::serial();
+        let a = randt(&mut rng, &[1, 1, 32, 32]);
+        let b = randt(&mut rng, &[1, 1, 32, 32]);
+        let ya1 = exec.infer(&engine, &a).unwrap();
+        let _ = exec.infer(&engine, &b).unwrap();
+        let ya2 = exec.infer(&engine, &a).unwrap();
+        assert_eq!(ya1, ya2, "buffer reuse changed results");
+    }
+
+    #[test]
+    fn executor_rejects_wrong_input_shape() {
+        let mut exec =
+            ExecutionPlan::compile(&lenet5(), 0.1, &[1, 1, 32, 32]).unwrap().into_executor();
+        let err = exec.infer(&ConvEngine::serial(), &Tensor::zeros(&[2, 1, 32, 32])).unwrap_err();
+        assert_eq!(
+            err,
+            SubaccelError::BadShape { expected: vec![1, 1, 32, 32], got: vec![2, 1, 32, 32] }
+        );
+    }
+
+    #[test]
+    fn bad_geometry_is_a_typed_plan_error() {
+        let net = CompiledNet::compile(&lenet5(), 0.1);
+        // wrong channel count → kernel mismatch at c1
+        match net.plan(&[1, 3, 32, 32]) {
+            Err(SubaccelError::KernelMismatch { expected_k: 25, got_k: 75 }) => {}
+            other => panic!("expected KernelMismatch, got {other:?}"),
+        }
+        // input too small for c1's 5x5 kernel
+        match net.plan(&[1, 1, 4, 4]) {
+            Err(SubaccelError::InvalidConfig { field: "input_shape", .. }) => {}
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn alexnet_plan_resolves_with_maxpool_and_relu() {
+        let plan = ExecutionPlan::compile(&alexnet(), 0.02, &[1, 3, 227, 227]).unwrap();
+        assert_eq!(plan.output_shape(), &[1, 1000]);
+        // all conv steps carry subtractions in their static counts at
+        // nonzero rounding
+        let convs: Vec<_> =
+            plan.steps().iter().filter(|s| s.name().starts_with("conv")).collect();
+        assert_eq!(convs.len(), 5);
+        assert!(convs.iter().all(|s| s.counts().subs > 0));
+    }
+
+    #[test]
+    fn profile_reports_every_step_with_static_counts() {
+        let mut exec =
+            ExecutionPlan::compile(&lenet5(), 0.1, &[1, 1, 32, 32]).unwrap().into_executor();
+        let engine = ConvEngine::serial();
+        let prof = exec.profile(&engine, &Tensor::full(&[1, 1, 32, 32], 0.1)).unwrap();
+        assert_eq!(prof.len(), 8);
+        let total: OpCounts = exec.plan().counts().total();
+        let prof_total = prof.iter().fold(OpCounts::default(), |a, (_, _, c)| a + *c);
+        assert_eq!(total, prof_total);
+    }
+}

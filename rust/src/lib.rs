@@ -29,6 +29,11 @@
 //! * The hot path is [`accel::ConvEngine`]: a persistent worker pool
 //!   executing [`accel::PackedPairing`] (structure-of-arrays pairing
 //!   tables) over im2col row shards, bit-identical across thread counts.
+//! * Whole-network inference follows a *plan/execute split*
+//!   ([`exec::ExecutionPlan`]): Algorithm 1 and all layer geometry are
+//!   resolved at compile time into a plan whose executor runs the full
+//!   network with zero steady-state allocations; `nn`, `runtime`, and
+//!   `coordinator` all serve through it (see ARCHITECTURE.md).
 //!
 //! Module map (see DESIGN.md for the experiment index):
 //!
@@ -38,6 +43,7 @@
 //! | [`nn`] | pure-rust CNN inference engine + LeNet-5/AlexNet defs + [`nn::PairedModel`] |
 //! | [`data`] | tensor container I/O + datasets (wire contract with python) |
 //! | [`accel`] | **the paper**: Algorithm 1, subtractor conv unit, packed parallel engine, op counts |
+//! | [`exec`] | plan/execute split: compile models into zero-alloc whole-network execution plans |
 //! | [`hw`] | 65 nm IEEE-754 cost model, virtual synthesis, PE simulator |
 //! | [`runtime`] | PJRT: load `artifacts/*.hlo.txt`, compile, execute; CPU paired executor |
 //! | [`coordinator`] | async request router + dynamic batcher + backend selection |
@@ -49,6 +55,7 @@ pub mod accel;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod exec;
 pub mod hw;
 pub mod metrics;
 pub mod nn;

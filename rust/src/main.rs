@@ -309,7 +309,7 @@ fn infer(artifacts: &PathBuf, args: &Args) -> Result<()> {
                 t => t,
             };
             let engine = Arc::new(ConvEngine::new(threads)?);
-            let exe = PairedCpuLeNet5::new(engine, &weights, rounding)?;
+            let mut exe = PairedCpuLeNet5::new(engine, &weights, rounding)?;
             println!("pairs per conv layer: {:?} ({threads} threads)", exe.pairs_per_layer());
             for i in 0..n {
                 let logits = exe.execute(&ds.image32(i))?;

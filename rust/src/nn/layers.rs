@@ -1,6 +1,13 @@
 //! Layer implementations for the pure-rust engine: convolution (stride /
 //! zero-padding), pooling, dense, activations. Each layer's `forward`
 //! returns both the output tensor and its [`OpCounts`].
+//!
+//! Every kernel has two entry points: an allocating one (`conv2d`,
+//! `dense`, …) and a `_into` variant writing a caller-owned buffer. The
+//! allocating forms are thin wrappers over the `_into` forms — same loop,
+//! same summation order, bit-identical results — so whole-network callers
+//! ([`crate::nn::Model::forward`], the [`crate::exec`] plan executor) can
+//! ping-pong two scratch buffers instead of allocating per layer.
 
 use super::ops::OpCounts;
 use crate::tensor::Tensor;
@@ -18,19 +25,25 @@ impl Activation {
     /// the paired forward ([`crate::nn::PairedModel`]) shares the exact
     /// same non-linearity code as the dense path.
     pub(crate) fn apply(&self, x: &mut Tensor) -> u64 {
+        self.apply_slice(x.data_mut())
+    }
+
+    /// [`Activation::apply`] on a raw slice — the entry point for
+    /// activations living in scratch buffers ([`crate::exec`]).
+    pub(crate) fn apply_slice(&self, xs: &mut [f32]) -> u64 {
         match self {
             Activation::None => 0,
             Activation::Tanh => {
-                for v in x.data_mut() {
+                for v in xs.iter_mut() {
                     *v = v.tanh();
                 }
-                x.len() as u64
+                xs.len() as u64
             }
             Activation::Relu => {
-                for v in x.data_mut() {
+                for v in xs.iter_mut() {
                     *v = v.max(0.0);
                 }
-                x.len() as u64
+                xs.len() as u64
             }
         }
     }
@@ -66,21 +79,58 @@ impl Layer {
 
     /// Run the layer; returns output and op counts (activation included).
     pub fn forward(&self, x: &Tensor) -> (Tensor, OpCounts) {
-        let (mut out, mut counts) = match &self.kind {
+        let mut out = Vec::new();
+        let (shape, counts) = self.forward_into(x.data(), x.shape(), &mut out);
+        (Tensor::new(&shape, out), counts)
+    }
+
+    /// [`Layer::forward`] on raw slices into a caller-owned buffer
+    /// (resized and fully overwritten; activation applied in place).
+    /// `Model::forward`/`Model::profile` ping-pong two such buffers so a
+    /// whole forward pass reuses the same pair of allocations.
+    pub fn forward_into(
+        &self,
+        xd: &[f32],
+        xshape: &[usize],
+        out: &mut Vec<f32>,
+    ) -> (Vec<usize>, OpCounts) {
+        let (shape, mut counts) = match &self.kind {
             LayerKind::Conv2d { weight, bias, stride, pad } => {
-                conv2d(x, weight, bias, *stride, *pad)
+                let (s, c) = conv2d_into(
+                    xd,
+                    xshape,
+                    weight.data(),
+                    weight.shape(),
+                    bias.data(),
+                    *stride,
+                    *pad,
+                    out,
+                );
+                (s.to_vec(), c)
             }
-            LayerKind::AvgPool { k } => avgpool(x, *k),
-            LayerKind::MaxPool { k, stride } => maxpool(x, *k, *stride),
-            LayerKind::Dense { weight, bias } => dense(x, weight, bias),
+            LayerKind::AvgPool { k } => {
+                let (s, c) = avgpool_into(xd, xshape, *k, out);
+                (s.to_vec(), c)
+            }
+            LayerKind::MaxPool { k, stride } => {
+                let (s, c) = maxpool_into(xd, xshape, *k, *stride, out);
+                (s.to_vec(), c)
+            }
+            LayerKind::Dense { weight, bias } => {
+                let (s, c) =
+                    dense_into(xd, xshape, weight.data(), weight.shape(), bias.data(), out);
+                (s.to_vec(), c)
+            }
             LayerKind::Flatten => {
-                let n = x.shape()[0];
-                let rest: usize = x.shape()[1..].iter().product();
-                (x.clone().reshape(&[n, rest]), OpCounts::default())
+                // pure row-major relabel NCHW → (N, C·H·W)
+                out.clear();
+                out.extend_from_slice(xd);
+                let rest: usize = xshape[1..].iter().product();
+                (vec![xshape[0], rest], OpCounts::default())
             }
         };
-        counts.activations += self.act.apply(&mut out);
-        (out, counts)
+        counts.activations += self.act.apply_slice(out);
+        (shape, counts)
     }
 }
 
@@ -92,19 +142,35 @@ pub fn conv2d(
     stride: usize,
     pad: usize,
 ) -> (Tensor, OpCounts) {
-    let (bs, cin, h, win) = dims4(x);
-    let (cout, wcin, kh, kw) = dims4(w);
+    let mut out = Vec::new();
+    let (shape, counts) =
+        conv2d_into(x.data(), x.shape(), w.data(), w.shape(), b.data(), stride, pad, &mut out);
+    (Tensor::new(&shape, out), counts)
+}
+
+/// [`conv2d`] on raw slices into a caller-owned buffer (resized and fully
+/// overwritten); returns the NCHW output shape alongside the counts.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into(
+    xd: &[f32],
+    xshape: &[usize],
+    wd: &[f32],
+    wshape: &[usize],
+    bd: &[f32],
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<f32>,
+) -> ([usize; 4], OpCounts) {
+    let (bs, cin, h, win) = dims4(xshape);
+    let (cout, wcin, kh, kw) = dims4(wshape);
     assert_eq!(cin, wcin, "channel mismatch {cin} vs {wcin}");
-    assert_eq!(b.len(), cout, "bias length");
+    assert_eq!(bd.len(), cout, "bias length");
     let (hp, wp) = (h + 2 * pad, win + 2 * pad);
     assert!(hp >= kh && wp >= kw, "kernel larger than padded input");
     let oh = (hp - kh) / stride + 1;
     let ow = (wp - kw) / stride + 1;
 
-    let mut out = vec![0f32; bs * cout * oh * ow];
-    let xd = x.data();
-    let wd = w.data();
-    let bd = b.data();
+    out.resize(bs * cout * oh * ow, 0.0);
 
     if pad == 0 {
         // Fast path (hot in every sweep): contiguous row dot-products, no
@@ -175,7 +241,7 @@ pub fn conv2d(
     let weights = (cout * cin * kh * kw) as u64;
     let positions = (bs * oh * ow) as u64;
     let counts = OpCounts::dense_layer(weights, positions, (bs * cout * oh * ow) as u64);
-    (Tensor::new(&[bs, cout, oh, ow], out), counts)
+    ([bs, cout, oh, ow], counts)
 }
 
 /// Plain 2×2 average pooling (no counts) — convenience for custom
@@ -197,11 +263,23 @@ pub fn dense_layer(x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
 }
 
 fn avgpool(x: &Tensor, k: usize) -> (Tensor, OpCounts) {
-    let (bs, c, h, w) = dims4(x);
+    let mut out = Vec::new();
+    let (shape, counts) = avgpool_into(x.data(), x.shape(), k, &mut out);
+    (Tensor::new(&shape, out), counts)
+}
+
+/// k×k average pooling (stride k) on raw slices into a caller-owned
+/// buffer; returns the NCHW output shape alongside the counts.
+pub fn avgpool_into(
+    xd: &[f32],
+    xshape: &[usize],
+    k: usize,
+    out: &mut Vec<f32>,
+) -> ([usize; 4], OpCounts) {
+    let (bs, c, h, w) = dims4(xshape);
     assert!(h % k == 0 && w % k == 0, "avgpool {k} on {h}x{w}");
     let (oh, ow) = (h / k, w / k);
-    let mut out = vec![0f32; bs * c * oh * ow];
-    let xd = x.data();
+    out.resize(bs * c * oh * ow, 0.0);
     let inv = 1.0 / (k * k) as f32;
     for bi in 0..bs {
         for ci in 0..c {
@@ -224,16 +302,29 @@ fn avgpool(x: &Tensor, k: usize) -> (Tensor, OpCounts) {
         muls: (bs * c * oh * ow) as u64,
         ..Default::default()
     };
-    (Tensor::new(&[bs, c, oh, ow], out), counts)
+    ([bs, c, oh, ow], counts)
 }
 
 fn maxpool(x: &Tensor, k: usize, stride: usize) -> (Tensor, OpCounts) {
-    let (bs, c, h, w) = dims4(x);
+    let mut out = Vec::new();
+    let (shape, counts) = maxpool_into(x.data(), x.shape(), k, stride, &mut out);
+    (Tensor::new(&shape, out), counts)
+}
+
+/// k×k max pooling with the given stride on raw slices into a
+/// caller-owned buffer; returns the NCHW output shape and (zero) counts.
+pub fn maxpool_into(
+    xd: &[f32],
+    xshape: &[usize],
+    k: usize,
+    stride: usize,
+    out: &mut Vec<f32>,
+) -> ([usize; 4], OpCounts) {
+    let (bs, c, h, w) = dims4(xshape);
     assert!(h >= k && w >= k);
     let oh = (h - k) / stride + 1;
     let ow = (w - k) / stride + 1;
-    let mut out = vec![0f32; bs * c * oh * ow];
-    let xd = x.data();
+    out.resize(bs * c * oh * ow, 0.0);
     for bi in 0..bs {
         for ci in 0..c {
             let base = (bi * c + ci) * h * w;
@@ -250,22 +341,35 @@ fn maxpool(x: &Tensor, k: usize, stride: usize) -> (Tensor, OpCounts) {
             }
         }
     }
-    (Tensor::new(&[bs, c, oh, ow], out), OpCounts::default())
+    ([bs, c, oh, ow], OpCounts::default())
 }
 
 fn dense(x: &Tensor, w: &Tensor, b: &Tensor) -> (Tensor, OpCounts) {
-    assert_eq!(x.ndim(), 2, "dense expects (B, In), got {:?}", x.shape());
-    let (bs, nin) = (x.shape()[0], x.shape()[1]);
-    let (nout, win) = (w.shape()[0], w.shape()[1]);
+    let mut out = Vec::new();
+    let (shape, counts) = dense_into(x.data(), x.shape(), w.data(), w.shape(), b.data(), &mut out);
+    (Tensor::new(&shape, out), counts)
+}
+
+/// Dense layer on raw slices into a caller-owned buffer; returns the
+/// `(B, Out)` output shape alongside the counts.
+pub fn dense_into(
+    xd: &[f32],
+    xshape: &[usize],
+    wd: &[f32],
+    wshape: &[usize],
+    bd: &[f32],
+    out: &mut Vec<f32>,
+) -> ([usize; 2], OpCounts) {
+    assert_eq!(xshape.len(), 2, "dense expects (B, In), got {xshape:?}");
+    let (bs, nin) = (xshape[0], xshape[1]);
+    let (nout, win) = (wshape[0], wshape[1]);
     assert_eq!(nin, win, "dense in-features {nin} vs {win}");
-    let mut out = vec![0f32; bs * nout];
-    let xd = x.data();
-    let wd = w.data();
+    out.resize(bs * nout, 0.0);
     for bi in 0..bs {
         let xrow = &xd[bi * nin..(bi + 1) * nin];
         for o in 0..nout {
             let wrow = &wd[o * nin..(o + 1) * nin];
-            let mut acc = b.data()[o];
+            let mut acc = bd[o];
             for i in 0..nin {
                 acc += xrow[i] * wrow[i];
             }
@@ -273,12 +377,11 @@ fn dense(x: &Tensor, w: &Tensor, b: &Tensor) -> (Tensor, OpCounts) {
         }
     }
     let counts = OpCounts::dense_layer((nout * nin) as u64, bs as u64, (bs * nout) as u64);
-    (Tensor::new(&[bs, nout], out), counts)
+    ([bs, nout], counts)
 }
 
-fn dims4(t: &Tensor) -> (usize, usize, usize, usize) {
-    let s = t.shape();
-    assert_eq!(s.len(), 4, "expected 4-D tensor, got {:?}", s);
+fn dims4(s: &[usize]) -> (usize, usize, usize, usize) {
+    assert_eq!(s.len(), 4, "expected 4-D tensor, got {s:?}");
     (s[0], s[1], s[2], s[3])
 }
 
@@ -364,6 +467,24 @@ mod tests {
         let mut t2 = Tensor::new(&[1], vec![0.0]);
         Activation::Tanh.apply(&mut t2);
         assert_eq!(t2.data(), &[0.0]);
+    }
+
+    #[test]
+    fn forward_into_matches_forward() {
+        let w = Tensor::full(&[1, 1, 2, 2], 0.5);
+        let b = Tensor::new(&[1], vec![0.25]);
+        let layer = Layer::new(
+            "c",
+            LayerKind::Conv2d { weight: w, bias: b, stride: 1, pad: 0 },
+            Activation::Tanh,
+        );
+        let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32 * 0.1).collect());
+        let (want, want_counts) = layer.forward(&x);
+        let mut buf = vec![9.0; 3]; // stale values must be fully overwritten
+        let (shape, counts) = layer.forward_into(x.data(), x.shape(), &mut buf);
+        assert_eq!(shape, want.shape());
+        assert_eq!(&buf[..], want.data());
+        assert_eq!(counts, want_counts);
     }
 
     #[test]

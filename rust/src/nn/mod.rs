@@ -16,9 +16,12 @@
 pub mod layers;
 mod models;
 mod ops;
+pub mod params;
 
 pub use layers::{Activation, Layer, LayerKind};
-pub use models::{alexnet, lenet5, lenet5_from_params, vgg_small, Model, PairedModel};
+pub use models::{
+    alexnet, lenet5, lenet5_from_params, lenet5_try_from_params, vgg_small, Model, PairedModel,
+};
 pub use ops::{ForwardCounts, OpCounts};
 
 #[cfg(test)]

@@ -6,11 +6,15 @@
 
 use super::layers::{Activation, Layer, LayerKind};
 use super::ops::{ForwardCounts, OpCounts};
-use crate::accel::{ConvEngine, SubConv2d};
+use super::params::{bias_key, weight_key};
+use crate::accel::ConvEngine;
 use crate::error::SubaccelError;
+use crate::exec::{CompiledNet, PlanExecutor};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use std::collections::HashMap;
+use std::fmt;
+use std::sync::Mutex;
 
 /// A sequential CNN.
 #[derive(Debug, Clone)]
@@ -24,16 +28,21 @@ impl Model {
         Self { name: name.to_string(), layers }
     }
 
-    /// Full forward pass with per-layer op accounting.
+    /// Full forward pass with per-layer op accounting. Activations
+    /// ping-pong between one reusable scratch pair instead of allocating
+    /// a fresh tensor per layer.
     pub fn forward(&self, x: &Tensor) -> (Tensor, ForwardCounts) {
         let mut counts = ForwardCounts::default();
-        let mut h = x.clone();
+        let mut cur = x.data().to_vec();
+        let mut shape = x.shape().to_vec();
+        let mut spare: Vec<f32> = Vec::new();
         for layer in &self.layers {
-            let (out, c) = layer.forward(&h);
+            let (next_shape, c) = layer.forward_into(&cur, &shape, &mut spare);
             counts.push(&layer.name, c);
-            h = out;
+            std::mem::swap(&mut cur, &mut spare);
+            shape = next_shape;
         }
-        (h, counts)
+        (Tensor::new(&shape, cur), counts)
     }
 
     /// Forward pass, discarding counts.
@@ -42,15 +51,20 @@ impl Model {
     }
 
     /// Per-layer wall-clock profile (layer name, seconds, counts) — the
-    /// measurement behind the Fig-1 reproduction.
+    /// measurement behind the Fig-1 reproduction. Same scratch-pair
+    /// execution as [`Model::forward`], so layer timings exclude
+    /// per-layer allocation noise.
     pub fn profile(&self, x: &Tensor) -> Vec<(String, f64, OpCounts)> {
-        let mut h = x.clone();
+        let mut cur = x.data().to_vec();
+        let mut shape = x.shape().to_vec();
+        let mut spare: Vec<f32> = Vec::new();
         let mut out = Vec::new();
         for layer in &self.layers {
             let t0 = std::time::Instant::now();
-            let (next, c) = layer.forward(&h);
+            let (next_shape, c) = layer.forward_into(&cur, &shape, &mut spare);
             out.push((layer.name.clone(), t0.elapsed().as_secs_f64(), c));
-            h = next;
+            std::mem::swap(&mut cur, &mut spare);
+            shape = next_shape;
         }
         out
     }
@@ -107,102 +121,80 @@ impl Model {
     }
 }
 
-/// One layer of a [`PairedModel`]: conv layers carry a compiled
-/// subtractor unit, everything else runs the ordinary dense code.
-#[derive(Debug, Clone)]
-enum PairedLayer {
-    Sub { name: String, unit: SubConv2d, act: Activation },
-    Plain(Layer),
+/// A [`Model`] compiled to the paper's paired representation — a thin
+/// wrapper over the plan/execute split in [`crate::exec`]: compile runs
+/// Algorithm 1 once into a [`CompiledNet`]; each input shape then gets a
+/// lazily compiled [`crate::exec::ExecutionPlan`] executor, cached so
+/// repeat shapes reuse its ping-pong scratch buffers. Execution goes
+/// through a caller-supplied [`ConvEngine`], so one engine (and its
+/// worker pool + scratch) serves the whole network — and can be shared
+/// across models, e.g. per coordinator replica.
+pub struct PairedModel {
+    net: CompiledNet,
+    /// One executor per seen input shape (interior-mutable so the
+    /// `&self` forward API of the pre-plan era keeps working).
+    execs: Mutex<HashMap<Vec<usize>, PlanExecutor>>,
 }
 
-/// A [`Model`] compiled to the paper's paired representation: every conv
-/// layer becomes a [`SubConv2d`] (preprocessed once at the configured
-/// rounding), pooling/dense/activation layers are shared with the dense
-/// path. Execution goes through a caller-supplied [`ConvEngine`], so one
-/// engine (and its worker pool + scratch) serves the whole network — and
-/// can be shared across models, e.g. per coordinator replica.
-#[derive(Debug, Clone)]
-pub struct PairedModel {
-    name: String,
-    layers: Vec<PairedLayer>,
-    rounding: f32,
+impl Clone for PairedModel {
+    fn clone(&self) -> Self {
+        // executors are per-instance scratch; the clone re-plans lazily
+        Self { net: self.net.clone(), execs: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl fmt::Debug for PairedModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PairedModel").field("net", &self.net).finish_non_exhaustive()
+    }
 }
 
 impl PairedModel {
     /// Compile every conv layer of `model` at the given rounding size.
     pub fn compile(model: &Model, rounding: f32) -> Self {
-        let layers = model
-            .layers
-            .iter()
-            .map(|layer| match &layer.kind {
-                LayerKind::Conv2d { weight, bias, stride, pad } => PairedLayer::Sub {
-                    name: layer.name.clone(),
-                    unit: SubConv2d::compile_geo(weight, bias, rounding, *stride, *pad),
-                    act: layer.act,
-                },
-                _ => PairedLayer::Plain(layer.clone()),
-            })
-            .collect();
-        Self { name: model.name.clone(), layers, rounding }
+        Self { net: CompiledNet::compile(model, rounding), execs: Mutex::new(HashMap::new()) }
     }
 
     pub fn name(&self) -> &str {
-        &self.name
+        self.net.name()
     }
 
     pub fn rounding(&self) -> f32 {
-        self.rounding
+        self.net.rounding()
+    }
+
+    /// The shape-independent compiled network (for callers that want to
+    /// plan shapes themselves, e.g. ahead-of-time warming).
+    pub fn compiled(&self) -> &CompiledNet {
+        &self.net
     }
 
     /// Total combined pairs across all conv layers.
     pub fn total_pairs(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| match l {
-                PairedLayer::Sub { unit, .. } => unit.total_pairs(),
-                PairedLayer::Plain(_) => 0,
-            })
-            .sum()
+        self.net.total_pairs()
     }
 
     /// Per-conv-layer pair counts `(name, pairs)`.
     pub fn pairs_per_conv(&self) -> Vec<(String, usize)> {
-        self.layers
-            .iter()
-            .filter_map(|l| match l {
-                PairedLayer::Sub { name, unit, .. } => {
-                    Some((name.clone(), unit.total_pairs()))
-                }
-                PairedLayer::Plain(_) => None,
-            })
-            .collect()
+        self.net.pairs_per_conv()
     }
 
     /// Full forward pass on the given engine, with per-layer op
-    /// accounting (conv layers report paired sub/MAC counts).
+    /// accounting (conv layers report paired sub/MAC counts). Runs on
+    /// the cached plan executor for `x`'s shape, compiling it on first
+    /// sight of the shape.
     pub fn forward_with(
         &self,
         engine: &ConvEngine,
         x: &Tensor,
     ) -> Result<(Tensor, ForwardCounts), SubaccelError> {
-        let mut counts = ForwardCounts::default();
-        let mut h = x.clone();
-        for layer in &self.layers {
-            match layer {
-                PairedLayer::Sub { name, unit, act } => {
-                    let (mut out, mut c) = unit.forward_with(engine, &h)?;
-                    c.activations += act.apply(&mut out);
-                    counts.push(name, c);
-                    h = out;
-                }
-                PairedLayer::Plain(layer) => {
-                    let (out, c) = layer.forward(&h);
-                    counts.push(&layer.name, c);
-                    h = out;
-                }
-            }
+        let mut execs = self.execs.lock().expect("plan cache lock");
+        if !execs.contains_key(x.shape()) {
+            let exec = self.net.plan(x.shape())?.into_executor();
+            execs.insert(x.shape().to_vec(), exec);
         }
-        Ok((h, counts))
+        let exec = execs.get_mut(x.shape()).expect("just inserted");
+        exec.forward(engine, x)
     }
 
     /// Forward pass on the given engine, discarding counts.
@@ -271,35 +263,54 @@ pub fn lenet5() -> Model {
     Model::new("lenet5", layers)
 }
 
-/// LeNet-5 with trained parameters (keys as in `python/compile/model.py`).
+/// LeNet-5 with trained parameters (keys as in
+/// [`crate::nn::params::PARAM_NAMES`]). Panics on missing parameters;
+/// use [`lenet5_try_from_params`] for a typed error instead.
 pub fn lenet5_from_params(params: &HashMap<String, Tensor>) -> Model {
-    let get = |k: &str| params.get(k).unwrap_or_else(|| panic!("missing param {k}")).clone();
-    let conv = |name: &str, w: &str, b: &str| {
-        Layer::new(
+    lenet5_try_from_params(params).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`lenet5_from_params`] with missing keys reported as
+/// [`SubaccelError::InvalidConfig`] — the serving paths (runtime,
+/// coordinator) build models from caller-supplied weight maps and must
+/// not panic on a bad artifact.
+pub fn lenet5_try_from_params(params: &HashMap<String, Tensor>) -> Result<Model, SubaccelError> {
+    let get = |k: String| {
+        params.get(&k).cloned().ok_or_else(|| SubaccelError::InvalidConfig {
+            field: "weights",
+            reason: format!("missing param {k}"),
+        })
+    };
+    let conv = |name: &str| -> Result<Layer, SubaccelError> {
+        Ok(Layer::new(
             name,
-            LayerKind::Conv2d { weight: get(w), bias: get(b), stride: 1, pad: 0 },
+            LayerKind::Conv2d {
+                weight: get(weight_key(name))?,
+                bias: get(bias_key(name))?,
+                stride: 1,
+                pad: 0,
+            },
             Activation::Tanh,
-        )
+        ))
+    };
+    let dense = |name: &str, act: Activation| -> Result<Layer, SubaccelError> {
+        Ok(Layer::new(
+            name,
+            LayerKind::Dense { weight: get(weight_key(name))?, bias: get(bias_key(name))? },
+            act,
+        ))
     };
     let layers = vec![
-        conv("c1", "c1_w", "c1_b"),
+        conv("c1")?,
         Layer::new("s2", LayerKind::AvgPool { k: 2 }, Activation::None),
-        conv("c3", "c3_w", "c3_b"),
+        conv("c3")?,
         Layer::new("s4", LayerKind::AvgPool { k: 2 }, Activation::None),
-        conv("c5", "c5_w", "c5_b"),
+        conv("c5")?,
         Layer::new("flat", LayerKind::Flatten, Activation::None),
-        Layer::new(
-            "f6",
-            LayerKind::Dense { weight: get("f6_w"), bias: get("f6_b") },
-            Activation::Tanh,
-        ),
-        Layer::new(
-            "out",
-            LayerKind::Dense { weight: get("out_w"), bias: get("out_b") },
-            Activation::None,
-        ),
+        dense("f6", Activation::Tanh)?,
+        dense("out", Activation::None)?,
     ];
-    Model::new("lenet5", layers)
+    Ok(Model::new("lenet5", layers))
 }
 
 /// AlexNet (Krizhevsky 2012) with random weights — only its *structure*

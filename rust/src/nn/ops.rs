@@ -73,7 +73,7 @@ impl AddAssign for OpCounts {
 }
 
 /// Per-layer counts for a full forward pass.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct ForwardCounts {
     pub per_layer: Vec<(String, OpCounts)>,
 }

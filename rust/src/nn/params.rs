@@ -1,0 +1,64 @@
+//! LeNet-5 parameter wire contract — the single registry of weight-map
+//! keys shared by every consumer of `artifacts/weights.bin`.
+//!
+//! Three places used to carry their own copy of this knowledge (the
+//! runtime executor's install order, the paired CPU path's conv keys,
+//! and the model builder in [`crate::nn`]); they all import from here
+//! now, so a renamed parameter is a one-file change on the rust side.
+//! The authoritative producer is `python/compile/model.py::PARAM_NAMES`
+//! — the order below is the wire order of the flat `weights.bin` blob
+//! and must match it exactly.
+
+/// Flat wire order of the LeNet-5 parameters in `weights.bin`.
+///
+/// Must match `python/compile/model.py::PARAM_NAMES`.
+pub const PARAM_NAMES: [&str; 10] = [
+    "c1_w", "c1_b", "c3_w", "c3_b", "c5_w", "c5_b", "f6_w", "f6_b", "out_w", "out_b",
+];
+
+/// Conv layers subject to Algorithm 1 preprocessing, as
+/// `(weight key, layer name)` — the layers whose weights get
+/// sorted/paired/rounded before execution.
+pub const CONV_KEYS: [(&str, &str); 3] = [("c1_w", "c1"), ("c3_w", "c3"), ("c5_w", "c5")];
+
+/// LeNet-5 conv layer names in network order (paper Fig. 2).
+pub const CONV_LAYERS: [&str; 3] = ["c1", "c3", "c5"];
+
+/// Weight-map key for a layer's kernel/weight matrix.
+pub fn weight_key(layer: &str) -> String {
+    format!("{layer}_w")
+}
+
+/// Weight-map key for a layer's bias vector.
+pub fn bias_key(layer: &str) -> String {
+    format!("{layer}_b")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_keys_agree_with_layer_names() {
+        for ((wk, name), expect) in CONV_KEYS.iter().zip(CONV_LAYERS) {
+            assert_eq!(*name, expect);
+            assert_eq!(*wk, weight_key(name));
+        }
+    }
+
+    #[test]
+    fn every_conv_key_is_a_wire_param() {
+        for (wk, name) in CONV_KEYS {
+            assert!(PARAM_NAMES.contains(&wk));
+            assert!(PARAM_NAMES.contains(&bias_key(name).as_str()));
+        }
+    }
+
+    #[test]
+    fn wire_order_pairs_weight_then_bias() {
+        for pair in PARAM_NAMES.chunks(2) {
+            assert!(pair[0].ends_with("_w") && pair[1].ends_with("_b"), "bad pair {pair:?}");
+            assert_eq!(pair[0].trim_end_matches("_w"), pair[1].trim_end_matches("_b"));
+        }
+    }
+}

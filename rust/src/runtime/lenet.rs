@@ -8,18 +8,14 @@
 
 use super::{tensor_to_literal, Executable, Runtime};
 use crate::accel::LayerPairing;
+// Wire order and conv-key knowledge live in one shared registry
+// (`nn::params`) consumed by this executor, the paired CPU path, and the
+// model builders alike.
+use crate::nn::params::{CONV_KEYS, PARAM_NAMES};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
-
-/// Parameter wire order — must match `python/compile/model.py::PARAM_NAMES`.
-pub const PARAM_NAMES: [&str; 10] = [
-    "c1_w", "c1_b", "c3_w", "c3_b", "c5_w", "c5_b", "f6_w", "f6_b", "out_w", "out_b",
-];
-
-/// Conv layers subject to preprocessing: (weight key, rust engine name).
-pub const CONV_KEYS: [(&str, &str); 3] = [("c1_w", "c1"), ("c3_w", "c3"), ("c5_w", "c5")];
 
 /// Which artifact family to execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

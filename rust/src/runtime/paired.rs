@@ -8,13 +8,16 @@
 //!   pairing tables (from Algorithm 1, run here in rust) instead of
 //!   dense weights.
 //! * [`PairedCpuLeNet5`] — the same network on the in-process
-//!   [`ConvEngine`] (no artifact, no PJRT): conv layers run the packed
-//!   pairing through a shared multi-threaded engine, pooling/dense run
-//!   the ordinary [`crate::nn::layers`] code.
+//!   [`ConvEngine`] (no artifact, no PJRT): the whole network is
+//!   compiled once into a [`CompiledNet`] (Algorithm 1 per conv layer)
+//!   and served through per-batch-size [`crate::exec::ExecutionPlan`]
+//!   executors, so the steady-state loop is allocation-free.
 
 use super::{tensor_to_literal, Executable, Runtime};
-use crate::accel::{ConvEngine, LayerPairing, SubConv2d};
-use crate::nn::layers::{avgpool2, dense_layer, tanh_inplace};
+use crate::accel::{ConvEngine, LayerPairing};
+use crate::exec::{CompiledNet, PlanExecutor};
+use crate::nn::lenet5_try_from_params;
+use crate::nn::params::{bias_key, weight_key};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -73,12 +76,10 @@ impl PairedLeNet5Executor {
         let mut lits = Vec::new();
         let mut pairs_per_layer = Vec::new();
         for (name, pmax, umax) in PAIRED_TABLE_SIZES {
-            let w = weights
-                .get(&format!("{name}_w"))
-                .with_context(|| format!("missing {name}_w"))?;
-            let b = weights
-                .get(&format!("{name}_b"))
-                .with_context(|| format!("missing {name}_b"))?;
+            let wk = weight_key(name);
+            let bk = bias_key(name);
+            let w = weights.get(&wk).with_context(|| format!("missing {wk}"))?;
+            let b = weights.get(&bk).with_context(|| format!("missing {bk}"))?;
             let pairing = LayerPairing::from_weights(w, rounding);
             pairs_per_layer.push(pairing.total_pairs());
             let cout = w.shape()[0];
@@ -135,23 +136,22 @@ impl PairedLeNet5Executor {
 }
 
 /// Pure-CPU paired LeNet-5 on a shared [`ConvEngine`] — the artifact-free
-/// serving backend. Conv layers (c1/c3/c5) execute their packed pairing
-/// on the engine's worker pool; pooling, tanh, and the dense head reuse
-/// the [`crate::nn::layers`] kernels. Batch-size flexible (no compiled
-/// shape), so the coordinator can serve any padded batch with it.
+/// serving backend. The whole network (convs paired by Algorithm 1,
+/// pooling, tanh, dense head) is compiled into one [`CompiledNet`] and
+/// executed through a per-batch-size [`PlanExecutor`] cache, so repeat
+/// batches of the same size run with zero steady-state allocations.
+/// Batch-size flexible (no compiled shape): the first batch of a new size
+/// resolves and warms a plan, later ones reuse it.
 pub struct PairedCpuLeNet5 {
     engine: Arc<ConvEngine>,
-    /// c1, c3, c5 compiled at the installed rounding.
-    units: Vec<SubConv2d>,
-    f6_w: Tensor,
-    f6_b: Tensor,
-    out_w: Tensor,
-    out_b: Tensor,
+    /// Shape-independent compile of the paired network at the installed
+    /// rounding (stage 1 of the plan/execute split).
+    net: CompiledNet,
+    /// Warmed executors keyed by batch size (stage 2+3, one per shape).
+    execs: HashMap<usize, PlanExecutor>,
     pairs_per_layer: Vec<usize>,
     rounding: f32,
 }
-
-const CPU_CONV_KEYS: [&str; 3] = ["c1", "c3", "c5"];
 
 impl PairedCpuLeNet5 {
     /// Build from trained weights (`weights.bin` keys, as in
@@ -161,43 +161,20 @@ impl PairedCpuLeNet5 {
         weights: &HashMap<String, Tensor>,
         rounding: f32,
     ) -> Result<Self> {
-        let get = |k: &str| {
-            weights.get(k).cloned().with_context(|| format!("missing {k}"))
-        };
-        let mut s = Self {
-            engine,
-            units: Vec::new(),
-            f6_w: get("f6_w")?,
-            f6_b: get("f6_b")?,
-            out_w: get("out_w")?,
-            out_b: get("out_b")?,
-            pairs_per_layer: Vec::new(),
-            rounding,
-        };
-        s.install(weights, rounding)?;
-        Ok(s)
+        let net = compile_net(weights, rounding)?;
+        let pairs_per_layer = net.pairs_per_conv().into_iter().map(|(_, p)| p).collect();
+        Ok(Self { engine, net, execs: HashMap::new(), pairs_per_layer, rounding })
     }
 
     /// Re-run Algorithm 1 at a new rounding and swap in the recompiled
-    /// units. Returns total combined pairs (the variant-switch contract
-    /// shared with [`super::LeNet5Executor::install_variant`]).
+    /// network (dropping the now-stale executor cache). Returns total
+    /// combined pairs (the variant-switch contract shared with
+    /// [`super::LeNet5Executor::install_variant`]).
     pub fn install(&mut self, weights: &HashMap<String, Tensor>, rounding: f32) -> Result<usize> {
-        let mut units = Vec::with_capacity(CPU_CONV_KEYS.len());
-        let mut pairs_per_layer = Vec::with_capacity(CPU_CONV_KEYS.len());
-        for name in CPU_CONV_KEYS {
-            let w = weights
-                .get(&format!("{name}_w"))
-                .with_context(|| format!("missing {name}_w"))?;
-            let b = weights
-                .get(&format!("{name}_b"))
-                .with_context(|| format!("missing {name}_b"))?;
-            let unit = SubConv2d::compile(w, b, rounding);
-            pairs_per_layer.push(unit.total_pairs());
-            units.push(unit);
-        }
-        self.units = units;
-        self.pairs_per_layer = pairs_per_layer;
+        self.net = compile_net(weights, rounding)?;
+        self.pairs_per_layer = self.net.pairs_per_conv().into_iter().map(|(_, p)| p).collect();
         self.rounding = rounding;
+        self.execs.clear();
         Ok(self.total_pairs())
     }
 
@@ -218,28 +195,38 @@ impl PairedCpuLeNet5 {
         &self.engine
     }
 
+    /// Resolve + warm the plan for `batch` ahead of traffic, so the first
+    /// real request at that size already runs allocation-free.
+    pub fn warm(&mut self, batch: usize) -> Result<()> {
+        self.executor_for(batch)?;
+        Ok(())
+    }
+
+    fn executor_for(&mut self, batch: usize) -> Result<&mut PlanExecutor> {
+        if !self.execs.contains_key(&batch) {
+            let mut exe = self.net.plan(&[batch, 1, 32, 32])?.into_executor();
+            exe.warm();
+            self.execs.insert(batch, exe);
+        }
+        Ok(self.execs.get_mut(&batch).expect("just inserted"))
+    }
+
     /// Classify a `(B, 1, 32, 32)` batch → `(B, 10)` logits on the paired
     /// CPU datapath (any batch size).
-    pub fn execute(&self, batch: &Tensor) -> Result<Tensor> {
+    pub fn execute(&mut self, batch: &Tensor) -> Result<Tensor> {
         let s = batch.shape();
         if s.len() != 4 || s[1] != 1 || s[2] != 32 || s[3] != 32 {
             bail!("expected (B,1,32,32) input, got {s:?}");
         }
-        let b = s[0];
-        // c1 → tanh → s2, c3 → tanh → s4 (LeNet-5, paper Fig 2)
-        let (mut h, _) = self.units[0].forward_with(&self.engine, batch)?;
-        tanh_inplace(&mut h);
-        let mut h = avgpool2(&h);
-        let (mut h3, _) = self.units[1].forward_with(&self.engine, &h)?;
-        tanh_inplace(&mut h3);
-        h = avgpool2(&h3);
-        // c5 → tanh → flatten (B, 120)
-        let (mut h5, _) = self.units[2].forward_with(&self.engine, &h)?;
-        tanh_inplace(&mut h5);
-        let flat = h5.reshape(&[b, 120]);
-        // dense head
-        let mut f6 = dense_layer(&flat, &self.f6_w, &self.f6_b);
-        tanh_inplace(&mut f6);
-        Ok(dense_layer(&f6, &self.out_w, &self.out_b))
+        let engine = Arc::clone(&self.engine);
+        let exe = self.executor_for(s[0])?;
+        Ok(exe.infer(&engine, batch)?)
     }
+}
+
+/// Stage-1 compile: build the LeNet-5 topology from the wire params and
+/// pair its conv layers at `rounding`.
+fn compile_net(weights: &HashMap<String, Tensor>, rounding: f32) -> Result<CompiledNet> {
+    let model = lenet5_try_from_params(weights).context("building LeNet-5 from weights")?;
+    Ok(CompiledNet::compile(&model, rounding))
 }

@@ -8,9 +8,11 @@
 //!
 //! * [`im2col`] / [`im2col_geo`] — allocate a fresh patch matrix (the
 //!   original API, kept for tests and one-shot callers).
-//! * [`im2col_into`] — write into a caller-owned buffer; the engine hot
-//!   path ([`crate::accel::ConvEngine`]) reuses one buffer across calls
-//!   so steady-state forwards do not allocate patches.
+//! * [`im2col_into`] / [`im2col_slice_into`] — write into a caller-owned
+//!   buffer; the engine hot path ([`crate::accel::ConvEngine`]) reuses one
+//!   buffer across calls so steady-state forwards do not allocate patches.
+//!   The slice variant takes raw NCHW data, for callers whose activations
+//!   live in scratch buffers rather than `Tensor`s ([`crate::exec`]).
 
 use super::Tensor;
 
@@ -87,13 +89,29 @@ pub fn im2col_into(
     pad: usize,
     out: &mut Vec<f32>,
 ) -> Im2colShape {
-    let s = im2col_shape(x.shape(), kh, kw, stride, pad);
-    let (b, c) = (x.shape()[0], x.shape()[1]);
-    let (h, w) = (x.shape()[2], x.shape()[3]);
+    im2col_slice_into(x.data(), x.shape(), kh, kw, stride, pad, out)
+}
+
+/// [`im2col_into`] on a raw NCHW slice. The whole-network executor in
+/// [`crate::exec`] keeps activations in reusable scratch buffers rather
+/// than `Tensor`s, so the engine needs an entry point that never touches
+/// a tensor handle.
+pub fn im2col_slice_into(
+    xd: &[f32],
+    shape: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<f32>,
+) -> Im2colShape {
+    let s = im2col_shape(shape, kh, kw, stride, pad);
+    let (b, c) = (shape[0], shape[1]);
+    let (h, w) = (shape[2], shape[3]);
+    debug_assert_eq!(xd.len(), b * c * h * w, "data length vs shape {shape:?}");
     let (oh, ow) = (s.out_h, s.out_w);
     let k = s.k;
     out.resize(s.rows * k, 0.0);
-    let xd = x.data();
 
     if pad == 0 {
         // Fast path: every tap is in bounds — contiguous row copies.

@@ -47,11 +47,21 @@ fn fmt_dur(d: Duration) -> String {
     }
 }
 
+/// Smoke mode: `SUBACCEL_BENCH_SMOKE=1` (set by `scripts/check.sh
+/// --smoke`) clamps every [`bench`] call to zero warmup and a single
+/// timed iteration, so each bench target exercises its full code path in
+/// seconds. Numbers printed under smoke mode are *not* measurements.
+pub fn smoke() -> bool {
+    std::env::var_os("SUBACCEL_BENCH_SMOKE").is_some()
+}
+
 /// Run `f` with warmup, then time `iters` runs. `f` should return
 /// something cheap (e.g. a checksum) to inhibit dead-code elimination;
-/// the value is passed through `std::hint::black_box` anyway.
+/// the value is passed through `std::hint::black_box` anyway. Under
+/// [`smoke`] mode the warmup/iteration counts are clamped to `(0, 1)`.
 pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
     assert!(iters > 0);
+    let (warmup, iters) = if smoke() { (0, 1) } else { (warmup, iters) };
     for _ in 0..warmup {
         std::hint::black_box(f());
     }

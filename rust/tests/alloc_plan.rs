@@ -1,0 +1,75 @@
+//! Proves the plan executor's headline claim: after warm-up, a
+//! steady-state [`PlanExecutor::forward_into`] performs **zero** heap
+//! allocations — activations ping-pong between pre-sized scratch buffers
+//! and the engine reuses its im2col scratch.
+//!
+//! Counts allocations with a `#[global_allocator]` wrapper, which is
+//! process-global — so this test lives alone in its own integration-test
+//! binary. Runs on [`ConvEngine::serial`]: the multi-threaded path hands
+//! row shards to workers through channels, which allocate per send by
+//! design (that cost is the pool's, not the plan's).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use subaccel::accel::ConvEngine;
+use subaccel::exec::ExecutionPlan;
+use subaccel::nn::lenet5;
+use subaccel::tensor::Tensor;
+
+/// System allocator with a global counter on every acquiring call
+/// (`alloc`, `realloc`, `alloc_zeroed`).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_forward_into_allocates_nothing() {
+    let engine = ConvEngine::serial();
+    let plan = ExecutionPlan::compile(&lenet5(), 0.05, &[2, 1, 32, 32]).unwrap();
+    let mut exe = plan.into_executor();
+    exe.warm();
+    let x = Tensor::full(&[2, 1, 32, 32], 0.3);
+    let mut out = Vec::new();
+    // warm-up: grows `out` and the engine's im2col scratch
+    let mut baseline = Vec::new();
+    for _ in 0..2 {
+        exe.forward_into(&engine, &x, &mut out).unwrap();
+        baseline = out.clone();
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        let shape = exe.forward_into(&engine, &x, &mut out).unwrap();
+        assert_eq!(shape, &[2, 10]);
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(allocs, 0, "steady-state forward_into performed {allocs} heap allocations");
+    // and it still computes: same logits as the warm-up passes
+    assert_eq!(out.len(), 20);
+    assert_eq!(out, baseline, "steady-state output diverged from warm-up output");
+}

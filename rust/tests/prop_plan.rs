@@ -1,0 +1,146 @@
+//! Plan/execute equivalence: the whole-network [`ExecutionPlan`] path
+//! (`PairedModel::forward_with` → `PlanExecutor`) must be *bit-identical*
+//! — outputs AND op counts — to the pre-refactor layer-by-layer paired
+//! execution, where each conv layer was an independent [`SubConv2d`] and
+//! every other layer allocated a fresh tensor. Covered: LeNet-5 (batch 1
+//! and 2) and the AlexNet conv stack (MaxPool + ReLU + strided/padded
+//! geometry), at rounding 0.0 and 0.05, on serial and multi-threaded
+//! engines.
+
+use subaccel::accel::{ConvEngine, SubConv2d};
+use subaccel::nn::{
+    alexnet, lenet5, Activation, ForwardCounts, Layer, LayerKind, Model, PairedModel,
+};
+use subaccel::tensor::Tensor;
+use subaccel::util::{forall, Gen};
+
+/// Same elementwise non-linearity the library applies, re-stated here so
+/// the reference path is independent of the plan executor's code.
+fn apply_act(act: Activation, t: &mut Tensor) -> u64 {
+    let xs = t.data_mut();
+    match act {
+        Activation::None => 0,
+        Activation::Tanh => {
+            for v in xs.iter_mut() {
+                *v = v.tanh();
+            }
+            xs.len() as u64
+        }
+        Activation::Relu => {
+            for v in xs.iter_mut() {
+                *v = v.max(0.0);
+            }
+            xs.len() as u64
+        }
+    }
+}
+
+/// The pre-refactor execution strategy, reconstructed: conv layers run
+/// their own [`SubConv2d`] on the engine, everything else runs the plain
+/// [`Layer::forward`] kernel, with a fresh tensor between layers.
+struct Reference {
+    layers: Vec<Layer>,
+    units: Vec<Option<SubConv2d>>,
+}
+
+impl Reference {
+    fn compile(model: &Model, rounding: f32) -> Self {
+        let units = model
+            .layers
+            .iter()
+            .map(|layer| match &layer.kind {
+                LayerKind::Conv2d { weight, bias, stride, pad } => {
+                    Some(SubConv2d::compile_geo(weight, bias, rounding, *stride, *pad))
+                }
+                _ => None,
+            })
+            .collect();
+        Self { layers: model.layers.clone(), units }
+    }
+
+    fn forward(
+        &self,
+        engine: &ConvEngine,
+        x: &Tensor,
+    ) -> Result<(Tensor, ForwardCounts), String> {
+        let mut counts = ForwardCounts::default();
+        let mut h = x.clone();
+        for (layer, unit) in self.layers.iter().zip(&self.units) {
+            let c = match unit {
+                Some(u) => {
+                    let (mut y, mut c) =
+                        u.forward_with(engine, &h).map_err(|e| e.to_string())?;
+                    c.activations += apply_act(layer.act, &mut y);
+                    h = y;
+                    c
+                }
+                None => {
+                    let (y, c) = layer.forward(&h);
+                    h = y;
+                    c
+                }
+            };
+            counts.push(&layer.name, c);
+        }
+        Ok((h, counts))
+    }
+}
+
+/// AlexNet truncated after pool5 + flatten: all five conv layers (the
+/// strided/padded/MaxPool/ReLU geometry LeNet-5 lacks) on an input small
+/// enough for a debug-mode test. (1, 3, 67, 67) → conv1 15×15 → pool1
+/// 7×7 → conv2 7×7 → pool2 3×3 → conv3/4/5 3×3 → pool5 1×1 → (1, 256).
+fn alexnet_convstack() -> Model {
+    let mut layers = alexnet().layers;
+    layers.truncate(9);
+    Model::new("alexnet_convstack", layers)
+}
+
+#[test]
+fn plan_forward_is_bit_identical_to_layer_by_layer() {
+    let engines = [ConvEngine::serial(), ConvEngine::new(3).unwrap()];
+    let nets: Vec<(Model, Vec<usize>)> = vec![
+        (lenet5(), vec![1, 1, 32, 32]),
+        (lenet5(), vec![2, 1, 32, 32]),
+        (alexnet_convstack(), vec![1, 3, 67, 67]),
+    ];
+    // Algorithm 1 runs once per (net, rounding) — only inputs vary below
+    let compiled: Vec<(Reference, PairedModel, &[usize])> = [0.0f32, 0.05]
+        .iter()
+        .flat_map(|&r| {
+            nets.iter().map(move |(m, shape)| {
+                (Reference::compile(m, r), PairedModel::compile(m, r), shape.as_slice())
+            })
+        })
+        .collect();
+    forall("plan-vs-layer-by-layer", 0x9_1A_2027, 3, |g: &mut Gen| {
+        for (reference, paired, shape) in &compiled {
+            let n: usize = shape.iter().product();
+            let x = Tensor::new(shape, g.rng.vec_normal(n));
+            for engine in &engines {
+                let (want, want_counts) = reference.forward(engine, &x)?;
+                let (got, got_counts) = paired
+                    .forward_with(engine, &x)
+                    .map_err(|e| format!("{} plan forward: {e}", paired.name()))?;
+                if got != want {
+                    return Err(format!(
+                        "{} rounding {} threads {}: plan output diverged (max |Δ| {})",
+                        paired.name(),
+                        paired.rounding(),
+                        engine.threads(),
+                        got.max_abs_diff(&want)
+                    ));
+                }
+                if got_counts != want_counts {
+                    return Err(format!(
+                        "{} rounding {} threads {}: plan op counts diverged",
+                        paired.name(),
+                        paired.rounding(),
+                        engine.threads()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,10 +1,25 @@
 #!/usr/bin/env bash
 # Repo gate: build + tests + formatting + lints. Run before every push.
 #
-# Usage: scripts/check.sh
+# Usage: scripts/check.sh [--smoke]
+#
+#   --smoke   additionally run every bench target once with
+#             SUBACCEL_BENCH_SMOKE=1 (clamped to a single short iteration
+#             each — exercises the bench code paths, measures nothing)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
+
+smoke=0
+for arg in "$@"; do
+    case "$arg" in
+        --smoke) smoke=1 ;;
+        *)
+            echo "usage: scripts/check.sh [--smoke]" >&2
+            exit 2
+            ;;
+    esac
+done
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "error: cargo not found on PATH — install the rust toolchain" >&2
@@ -23,5 +38,13 @@ cargo fmt --check
 
 echo "== cargo clippy -- -D warnings =="
 cargo clippy -- -D warnings
+
+if [ "$smoke" = 1 ]; then
+    for bench in benches/*.rs; do
+        name="$(basename "$bench" .rs)"
+        echo "== bench smoke: $name =="
+        SUBACCEL_BENCH_SMOKE=1 cargo bench --bench "$name"
+    done
+fi
 
 echo "== all checks passed =="
