@@ -11,16 +11,19 @@
 //!
 //! Run: `cargo bench --bench conv_hotpath`
 
-use subaccel::accel::{ConvEngine, SubConv2d};
+use subaccel::accel::{tile_rows_heuristic, ConvEngine, SubConv2d};
 use subaccel::data::load_weights;
 use subaccel::nn::layers::conv2d;
 use subaccel::nn::{lenet5, lenet5_from_params, PairedModel};
 use subaccel::runtime::{LeNet5Executor, Runtime, Variant};
 use subaccel::tensor::Tensor;
-use subaccel::util::{bench, bench_header, Rng};
+use subaccel::util::{bench, bench_header, JsonReport, Rng};
 
 fn main() {
     let mut rng = Rng::seed_from_u64(42);
+    // machine-readable trajectory (SUBACCEL_BENCH_JSON=BENCH_8.json via
+    // scripts/check.sh --smoke); no-op when the env var is unset
+    let mut json = JsonReport::from_env();
     println!("{}", bench_header());
 
     // --- L3 kernels: dense vs paired, LeNet C3 geometry -----------------
@@ -70,7 +73,45 @@ fn main() {
             let diff = got.max_abs_diff(&want);
             assert!(diff <= 1e-5, "engine t={t} diverged from serial: max |Δ| {diff}");
         }
+        let ops = (sc.total_pairs() + sc.total_unpaired()) as f64;
+        json.push(&r1, &[("ops_per_row", ops), ("threads", 1.0)]);
+        json.push(&rn, &[("ops_per_row", ops), ("threads", n_threads as f64)]);
     }
+
+    // --- tiled microkernel vs untiled reference, AlexNet-class conv ------
+    // Acceptance gate (ISSUE 8): the tile-blocked kernel must beat the
+    // reference compute_rows by ≥ 1.4× single-threaded on an
+    // AlexNet-class layer, and match it bit-for-bit. conv2 geometry:
+    // 96→256 channels, 5×5, pad 2 ⇒ k_len 2400, 27×27 = 729 rows —
+    // the reference path re-streams ~4.8 MB of tap tables per row.
+    let ax = Tensor::new(&[1, 96, 27, 27], rng.vec_range(96 * 27 * 27, -1.0, 1.0));
+    let aw = Tensor::new(&[256, 96, 5, 5], rng.vec_range(256 * 96 * 25, -0.3, 0.3));
+    let ab = Tensor::new(&[256], rng.vec_range(256, -0.1, 0.1));
+    let asc = SubConv2d::compile_geo(&aw, &ab, 0.05, 1, 2);
+    let tile = e1.tile_rows().unwrap_or_else(|| {
+        tile_rows_heuristic(asc.packed().k_len(), asc.packed().cout(), asc.packed().total_taps())
+    });
+    println!("\n# tiled microkernel vs reference, alexnet-class conv2 (tile {tile} rows)");
+    let rref = bench("alexconv2 reference compute_rows t=1", 1, 5, || {
+        ConvEngine::forward_packed_reference(asc.packed(), asc.bias(), asc.geometry(), &ax)
+            .unwrap()
+            .0
+            .len()
+    });
+    println!("{}", rref.report());
+    let rtiled = bench("alexconv2 tiled t=1", 1, 5, || asc.forward_with(&e1, &ax).unwrap().0.len());
+    let tiled_speedup = rref.mean.as_secs_f64() / rtiled.mean.as_secs_f64();
+    println!("{}  [{tiled_speedup:.2}x vs reference]", rtiled.report());
+    // bit-identity gate: tiling must not change a single bit
+    let want =
+        ConvEngine::forward_packed_reference(asc.packed(), asc.bias(), asc.geometry(), &ax)
+            .unwrap()
+            .0;
+    let got = asc.forward_with(&e1, &ax).unwrap().0;
+    assert_eq!(got.data(), want.data(), "tiled kernel diverged from reference");
+    let aops = ((asc.total_pairs() + asc.total_unpaired()) * 27 * 27) as f64;
+    json.push(&rref, &[("ops", aops), ("threads", 1.0), ("tile_rows", 0.0)]);
+    json.push(&rtiled, &[("ops", aops), ("threads", 1.0), ("tile_rows", tile as f64)]);
 
     // --- whole-network plan executor (zero-alloc steady state) ----------
     let m = lenet5();
@@ -97,6 +138,14 @@ fn main() {
         let want = pm.infer_with(eng, &xb).expect("paired forward");
         let got = exe.infer(eng, &xb).expect("plan infer");
         assert_eq!(got, want, "plan executor diverged from PairedModel");
+    }
+    json.push(&r, &[("threads", 1.0)]);
+    json.push(&rn, &[("threads", n_threads as f64)]);
+
+    // the CPU-path trajectory is complete here; write it before the
+    // artifact-gated sections so CI gets a file even without artifacts
+    if let Some(p) = json.finish().expect("write bench json") {
+        println!("\nwrote {p}");
     }
 
     // --- whole-model paths ----------------------------------------------

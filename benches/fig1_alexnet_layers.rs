@@ -6,14 +6,15 @@
 //! Run: `cargo bench --bench fig1_alexnet_layers`
 //!
 //! Expected shape (paper): convolutional layers ≈ 90 % of inference time.
-//! A second section times each conv layer on the paired subtractor
-//! engine, serial vs multi-threaded — the layers Fig 1 says dominate are
-//! exactly the ones the engine shards.
+//! A second section profiles the paired path through the same plan-level
+//! instrumentation ([`PlanExecutor::profile`] via
+//! `PairedModel::profile_with`), serial vs multi-threaded — the layers
+//! Fig 1 says dominate are exactly the ones the engine shards.
 
-use subaccel::accel::{ConvEngine, SubConv2d};
-use subaccel::nn::{alexnet, LayerKind};
+use subaccel::accel::ConvEngine;
+use subaccel::nn::{alexnet, PairedModel};
 use subaccel::tensor::Tensor;
-use subaccel::util::{bench, bench_header, bench_smoke};
+use subaccel::util::bench_smoke;
 
 fn main() {
     let m = alexnet();
@@ -58,28 +59,34 @@ fn main() {
         100.0 * conv_m as f64 / total_m as f64
     );
 
-    // --- the dominant layers on the paired engine, serial vs parallel ----
+    // --- the paired path, per step through the plan profiler -------------
+    // Same per-step instrumentation as the dense profile above:
+    // PairedModel::profile_with routes through PlanExecutor::profile, so
+    // both columns name the same steps and carry the same static counts.
     let n_threads = ConvEngine::host_threads();
+    let serial = ConvEngine::serial();
     let engine = ConvEngine::new(n_threads).expect("engine");
-    println!("\n# per-conv-layer paired engine (rounding 0.05), serial vs {n_threads} threads");
-    println!("{}", bench_header());
-    let mut h = x.clone();
-    for layer in &m.layers {
-        if let LayerKind::Conv2d { weight, bias, stride, pad } = &layer.kind {
-            let unit = SubConv2d::compile_geo(weight, bias, 0.05, *stride, *pad);
-            let serial = bench(&format!("{} serial", layer.name), 1, 5, || {
-                unit.forward(&h).0.len()
-            });
-            println!("{}", serial.report());
-            let par = bench(&format!("{} engine t={n_threads}", layer.name), 1, 5, || {
-                unit.forward_with(&engine, &h).unwrap().0.len()
-            });
-            println!(
-                "{}  [{:.2}x]",
-                par.report(),
-                serial.mean.as_secs_f64() / par.mean.as_secs_f64()
-            );
-        }
-        h = layer.forward(&h).0;
+    let pm = PairedModel::compile(&m, 0.05);
+    println!("\n# paired plan profile (rounding 0.05), serial vs {n_threads} threads");
+    println!("{:>8} {:>12} {:>12} {:>8} {:>12}", "step", "serial_ms", "par_ms", "speedup", "subs");
+    let p1 = pm.profile_with(&serial, &x).expect("paired profile (serial)");
+    let pn = pm.profile_with(&engine, &x).expect("paired profile (parallel)");
+    for ((name, t1, counts), (_, tn, _)) in p1.iter().zip(&pn) {
+        println!(
+            "{:>8} {:>12.2} {:>12.2} {:>7.2}x {:>12}",
+            name,
+            t1 * 1e3,
+            tn * 1e3,
+            t1 / tn.max(1e-9),
+            counts.subs
+        );
     }
+    let conv1: f64 = p1.iter().filter(|(n, ..)| n.starts_with("conv")).map(|(_, t, _)| *t).sum();
+    let convn: f64 = pn.iter().filter(|(n, ..)| n.starts_with("conv")).map(|(_, t, _)| *t).sum();
+    println!(
+        "conv total: serial {:.1} ms vs t={n_threads} {:.1} ms ({:.2}x)",
+        conv1 * 1e3,
+        convn * 1e3,
+        conv1 / convn.max(1e-9)
+    );
 }

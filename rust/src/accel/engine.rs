@@ -18,12 +18,24 @@
 //!   allocation**. [`ConvEngine::forward_packed_slice_into`] is the same
 //!   path on raw activation slices, for the whole-network plans in
 //!   [`crate::exec`].
+//! * **Tile blocking** — each shard walks its rows in tiles of `R` rows
+//!   × all filters ([`compute_rows_tiled`]), with the filter loop on the
+//!   outside: one filter's CSR tap slices (`pair_i1/pair_i2/pair_k`,
+//!   `unp_idx/unp_w`) are streamed from memory once per *tile* instead
+//!   of once per *row*. The tile's patches come from a streaming
+//!   [`im2col_rows_into`] strip (`R·k_len` floats, sized to stay
+//!   L1-resident by [`tile_rows_heuristic`]; override with
+//!   `SUBACCEL_TILE_ROWS` or [`ConvEngine::with_tile_rows`]) — the full
+//!   patch matrix is never materialised.
 //!
-//! Numerics: every shard runs the same [`compute_rows`] kernel in the
-//! same iteration order, and Rust f32 arithmetic is strict — so the
-//! multi-threaded result is **bit-identical** to the serial one (and to
-//! `SubConv2d::forward`, which delegates here). Property-tested in
-//! `rust/tests/prop_engine.rs`.
+//! Numerics: every path — serial, caller shard, worker shard, any tile
+//! size — computes each output element with exactly the same reduction
+//! order (pair lane summed in table order, then MAC lane, then
+//! `bias + pair + mac`), and Rust f32 arithmetic is strict — so results
+//! are **bit-identical** across thread counts *and* tile sizes, and to
+//! the untiled reference kernel [`ConvEngine::forward_packed_reference`]
+//! (tiling only regroups independent output elements; see
+//! ARCHITECTURE.md). Property-tested in `rust/tests/prop_engine.rs`.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
@@ -32,7 +44,7 @@ use std::thread::JoinHandle;
 use super::preprocess::{FilterPairing, LayerPairing};
 use crate::error::SubaccelError;
 use crate::nn::OpCounts;
-use crate::tensor::{im2col_slice_into, Tensor};
+use crate::tensor::{im2col_rows_into, im2col_shape, im2col_slice_into, Tensor};
 
 /// Spatial geometry of a conv layer (everything [`ConvEngine`] needs
 /// beyond the pairing itself).
@@ -120,6 +132,17 @@ impl PackedPairing {
             p.pair_off.push(p.pair_k.len() as u32);
             p.unp_off.push(p.unp_w.len() as u32);
         }
+        // Bounds proof for the tiled kernel's unchecked gathers: every
+        // tap index is `< k_len`, checked once here at pack time so
+        // `compute_rows_tiled` can use `get_unchecked` on patch rows of
+        // length `k_len` (the engine rejects any other patch length with
+        // `KernelMismatch` before reaching the kernel).
+        let k = p.k_len as u32;
+        assert!(
+            p.pair_i1.iter().chain(&p.pair_i2).chain(&p.unp_idx).all(|&i| i < k),
+            "pairing tap index out of range (k_len {})",
+            p.k_len
+        );
         p
     }
 
@@ -186,22 +209,97 @@ impl PackedPairing {
     pub fn total_unpaired(&self) -> usize {
         self.unp_w.len()
     }
+
+    /// Total tap-table *entries* the kernel streams per im2col row: each
+    /// pair contributes its two indices and one `k`, each unpaired tap
+    /// its index and weight. [`tile_rows_heuristic`] uses this as the
+    /// layer's tap-bandwidth measure.
+    pub fn total_taps(&self) -> usize {
+        3 * self.pair_k.len() + 2 * self.unp_w.len()
+    }
+
+    /// Rectangular zero-padded tap tables, row-major `(cout, pmax)` for
+    /// the pair arrays and `(cout, umax)` for the MAC arrays — the wire
+    /// layout the AOT-compiled PJRT paired artifact expects
+    /// ([`crate::runtime`]). Indices widen to `i32` (XLA's gather index
+    /// type); padding lanes are index 0 with weight 0.0, so they gather
+    /// a real element and multiply it away.
+    ///
+    /// Errors with [`SubaccelError::InvalidConfig`] when any filter has
+    /// more pairs than `pmax` or more unpaired taps than `umax`.
+    pub fn padded_tables(&self, pmax: usize, umax: usize) -> Result<PaddedTables, SubaccelError> {
+        let mut t = PaddedTables {
+            pair_i1: vec![0; self.cout * pmax],
+            pair_i2: vec![0; self.cout * pmax],
+            pair_k: vec![0.0; self.cout * pmax],
+            unp_idx: vec![0; self.cout * umax],
+            unp_w: vec![0.0; self.cout * umax],
+        };
+        for c in 0..self.cout {
+            let (i1, i2, k) = self.pairs(c);
+            let (ui, uw) = self.unpaired(c);
+            if i1.len() > pmax || ui.len() > umax {
+                return Err(SubaccelError::InvalidConfig {
+                    field: "padded_tables",
+                    reason: format!(
+                        "filter {c}: {} pairs / {} unpaired exceed table sizes ({pmax}, {umax})",
+                        i1.len(),
+                        ui.len()
+                    ),
+                });
+            }
+            for (j, (&a, (&b, &kv))) in i1.iter().zip(i2.iter().zip(k)).enumerate() {
+                t.pair_i1[c * pmax + j] = a as i32;
+                t.pair_i2[c * pmax + j] = b as i32;
+                t.pair_k[c * pmax + j] = kv;
+            }
+            for (j, (&iu, &wv)) in ui.iter().zip(uw).enumerate() {
+                t.unp_idx[c * umax + j] = iu as i32;
+                t.unp_w[c * umax + j] = wv;
+            }
+        }
+        Ok(t)
+    }
 }
 
-/// One worker's slice of a forward: raw views into the engine's scratch
-/// buffers plus the caller's pairing/bias. Sound because the dispatching
-/// thread holds the engine lock and blocks on the done channel until
-/// every shard is finished, and shards write disjoint `out` regions
-/// carved with `split_at_mut`.
+/// Zero-padded rectangular tap tables produced by
+/// [`PackedPairing::padded_tables`] — the single source of the PJRT
+/// paired artifact's table literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaddedTables {
+    /// `(cout, pmax)` row-major first-operand gather indices.
+    pub pair_i1: Vec<i32>,
+    /// `(cout, pmax)` row-major second-operand gather indices.
+    pub pair_i2: Vec<i32>,
+    /// `(cout, pmax)` row-major combined-pair weights.
+    pub pair_k: Vec<f32>,
+    /// `(cout, umax)` row-major MAC gather indices.
+    pub unp_idx: Vec<i32>,
+    /// `(cout, umax)` row-major MAC weights.
+    pub unp_w: Vec<f32>,
+}
+
+/// One worker's slice of a forward: a raw view of the caller's input
+/// plus geometry (each worker streams its own im2col strips from the
+/// input — patches are never pre-materialised), the shard's disjoint
+/// output region, and the caller's pairing/bias. Sound because the
+/// dispatching thread holds the engine lock and blocks on the done
+/// channel until every shard is finished, and shards write disjoint
+/// `out` regions carved with `split_at_mut`.
 struct Shard {
-    patches: *const f32,
-    patches_len: usize,
+    x: *const f32,
+    x_len: usize,
+    shape: [usize; 4],
+    geo: ConvGeometry,
+    /// First global im2col row of this shard (rows ordered `(b, oy, ox)`).
+    row0: usize,
     out: *mut f32,
     out_len: usize,
     packed: *const PackedPairing,
     bias: *const f32,
     bias_len: usize,
-    k: usize,
+    /// Row tile size, fixed per forward so all shards block identically.
+    tile: usize,
 }
 
 // Raw pointers strip auto-Send; the dispatch protocol above restores the
@@ -214,7 +312,10 @@ struct Pool {
 }
 
 struct Scratch {
-    patches: Vec<f32>,
+    /// The calling thread's streaming im2col strip (workers own their
+    /// own — see `worker_loop`). Grows to the largest `tile · k_len`
+    /// seen, then steady state allocates nothing.
+    strip: Vec<f32>,
     rowmajor: Vec<f32>,
 }
 
@@ -232,6 +333,10 @@ struct Inner {
 /// so concurrent `forward_*` calls serialize rather than race.
 pub struct ConvEngine {
     threads: usize,
+    /// Fixed row-tile override (`SUBACCEL_TILE_ROWS` env or
+    /// [`ConvEngine::with_tile_rows`]); `None` → per-layer
+    /// [`tile_rows_heuristic`].
+    tile_rows: Option<usize>,
     inner: Mutex<Inner>,
     handles: Vec<JoinHandle<()>>,
 }
@@ -239,14 +344,36 @@ pub struct ConvEngine {
 impl ConvEngine {
     /// Build an engine running on `threads` OS threads total (the
     /// calling thread counts as one; `threads - 1` workers are spawned).
+    ///
+    /// Reads the `SUBACCEL_TILE_ROWS` override once here (construction,
+    /// not the hot path); unset, empty, or unparsable values fall back
+    /// to the per-layer tile heuristic.
     pub fn new(threads: usize) -> Result<Self, SubaccelError> {
+        Self::build(threads, env_tile_rows())
+    }
+
+    /// [`ConvEngine::new`] with a fixed row-tile size for every layer,
+    /// overriding the per-layer heuristic — for bench sweeps and the
+    /// tiled-vs-reference bit-identity tests. Equivalent to running with
+    /// `SUBACCEL_TILE_ROWS=<tile_rows>`.
+    pub fn with_tile_rows(threads: usize, tile_rows: usize) -> Result<Self, SubaccelError> {
+        if tile_rows == 0 {
+            return Err(SubaccelError::InvalidConfig {
+                field: "tile_rows",
+                reason: "row tile must be at least 1".into(),
+            });
+        }
+        Self::build(threads, Some(tile_rows))
+    }
+
+    fn build(threads: usize, tile_rows: Option<usize>) -> Result<Self, SubaccelError> {
         if threads == 0 {
             return Err(SubaccelError::InvalidConfig {
                 field: "threads",
                 reason: "engine needs at least one thread".into(),
             });
         }
-        let scratch = Scratch { patches: Vec::new(), rowmajor: Vec::new() };
+        let scratch = Scratch { strip: Vec::new(), rowmajor: Vec::new() };
         let (pool, handles) = if threads == 1 {
             (None, Vec::new())
         } else {
@@ -268,7 +395,7 @@ impl ConvEngine {
             }
             (Some(Pool { job_txs, done_rx }), handles)
         };
-        Ok(Self { threads, inner: Mutex::new(Inner { scratch, pool }), handles })
+        Ok(Self { threads, tile_rows, inner: Mutex::new(Inner { scratch, pool }), handles })
     }
 
     /// Single-threaded engine (no workers; runs inline on the caller).
@@ -279,6 +406,12 @@ impl ConvEngine {
     /// Number of OS threads this engine computes on.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The fixed row-tile override, if any (`None` → per-layer
+    /// heuristic).
+    pub fn tile_rows(&self) -> Option<usize> {
+        self.tile_rows
     }
 
     /// Detected host parallelism (≥ 1), for `--threads 0`-style auto
@@ -302,8 +435,9 @@ impl ConvEngine {
 
     /// Run a paired conv layer into a caller-owned buffer (resized and
     /// fully overwritten). With a warm buffer this path performs zero
-    /// heap allocation: im2col patches and the row-major intermediate
-    /// live in engine scratch reused across calls.
+    /// heap allocation: the streaming im2col strip and the row-major
+    /// intermediate live in engine scratch reused across calls (workers
+    /// keep their own persistent strips).
     ///
     /// Errors with [`SubaccelError::KernelMismatch`] when the input's
     /// per-patch length differs from what the pairing was compiled for;
@@ -335,17 +469,111 @@ impl ConvEngine {
         out: &mut Vec<f32>,
     ) -> Result<(ConvOutShape, OpCounts), SubaccelError> {
         assert_eq!(bias.len(), packed.cout, "bias length != Cout");
+        let s = im2col_shape(xshape, geo.kh, geo.kw, geo.stride, geo.pad);
+        if s.k != packed.k_len {
+            return Err(SubaccelError::KernelMismatch {
+                expected_k: packed.k_len,
+                got_k: s.k,
+            });
+        }
+        let xs = [xshape[0], xshape[1], xshape[2], xshape[3]];
+        debug_assert_eq!(xd.len(), xs.iter().product::<usize>(), "data length vs shape {xshape:?}");
+        let (rows, cout) = (s.rows, packed.cout);
+        let tile = self
+            .tile_rows
+            .unwrap_or_else(|| tile_rows_heuristic(packed.k_len, cout, packed.total_taps()));
+
         let inner = &mut *self.inner.lock().expect("engine lock");
         let Inner { scratch, pool } = inner;
+        scratch.rowmajor.resize(rows * cout, 0.0);
 
+        match pool {
+            None => compute_shard(
+                xd,
+                &xs,
+                geo,
+                0,
+                packed,
+                bias,
+                tile,
+                &mut scratch.strip,
+                &mut scratch.rowmajor[..],
+            ),
+            Some(pool) => {
+                let chunk = (rows + self.threads - 1) / self.threads;
+                let mut rest_out: &mut [f32] = &mut scratch.rowmajor[..];
+
+                // shard 0 stays on the calling thread
+                let take0 = chunk.min(rows);
+                let (out0, r) = std::mem::take(&mut rest_out).split_at_mut(take0 * cout);
+                rest_out = r;
+
+                // remaining shards go to the workers (≤ threads − 1 of
+                // them, since chunk = ⌈rows / threads⌉); each worker
+                // streams its own im2col strips from the shared input
+                let mut off = take0;
+                let mut sent = 0usize;
+                while off < rows {
+                    let take = chunk.min(rows - off);
+                    let (o, r) = std::mem::take(&mut rest_out).split_at_mut(take * cout);
+                    rest_out = r;
+                    let shard = Shard {
+                        x: xd.as_ptr(),
+                        x_len: xd.len(),
+                        shape: xs,
+                        geo,
+                        row0: off,
+                        out: o.as_mut_ptr(),
+                        out_len: o.len(),
+                        packed: packed as *const PackedPairing,
+                        bias: bias.as_ptr(),
+                        bias_len: bias.len(),
+                        tile,
+                    };
+                    pool.job_txs[sent].send(shard).expect("conv-engine worker died");
+                    sent += 1;
+                    off += take;
+                }
+                compute_shard(xd, &xs, geo, 0, packed, bias, tile, &mut scratch.strip, out0);
+                for _ in 0..sent {
+                    pool.done_rx.recv().expect("conv-engine worker died");
+                }
+            }
+        }
+
+        out.resize(rows * cout, 0.0);
+        rowmajor_to_nchw(&scratch.rowmajor, s.batch, cout, s.out_h, s.out_w, out);
+
+        let counts = OpCounts::paired_layer(
+            packed.total_pairs() as u64,
+            packed.total_unpaired() as u64,
+            rows as u64,
+            (rows * cout) as u64,
+        );
+        Ok((ConvOutShape { batch: s.batch, cout, out_h: s.out_h, out_w: s.out_w }, counts))
+    }
+
+    /// Untiled reference path: full-matrix im2col followed by the
+    /// row-major [`compute_rows`] kernel, allocating everything fresh.
+    /// This is the pre-tiling engine semantics, kept as the oracle the
+    /// tiled path must match bit-for-bit (`rust/tests/prop_engine.rs`)
+    /// and as the baseline the `conv_hotpath` bench compares against.
+    pub fn forward_packed_reference(
+        packed: &PackedPairing,
+        bias: &Tensor,
+        geo: ConvGeometry,
+        x: &Tensor,
+    ) -> Result<(Tensor, OpCounts), SubaccelError> {
+        assert_eq!(bias.len(), packed.cout, "bias length != Cout");
+        let mut patches = Vec::new();
         let s = im2col_slice_into(
-            xd,
-            xshape,
+            x.data(),
+            x.shape(),
             geo.kh,
             geo.kw,
             geo.stride,
             geo.pad,
-            &mut scratch.patches,
+            &mut patches,
         );
         if s.k != packed.k_len {
             return Err(SubaccelError::KernelMismatch {
@@ -354,81 +582,32 @@ impl ConvEngine {
             });
         }
         let (rows, cout) = (s.rows, packed.cout);
-        scratch.rowmajor.resize(rows * cout, 0.0);
-
-        match pool {
-            None => compute_rows(
-                &scratch.patches[..rows * s.k],
-                s.k,
-                packed,
-                bias,
-                &mut scratch.rowmajor[..],
-            ),
-            Some(pool) => {
-                let chunk = (rows + self.threads - 1) / self.threads;
-                let mut rest_out: &mut [f32] = &mut scratch.rowmajor[..];
-                let mut rest_p: &[f32] = &scratch.patches[..rows * s.k];
-
-                // shard 0 stays on the calling thread
-                let take0 = chunk.min(rows);
-                let (out0, r) = std::mem::take(&mut rest_out).split_at_mut(take0 * cout);
-                rest_out = r;
-                let (p0, rp) = rest_p.split_at(take0 * s.k);
-                rest_p = rp;
-
-                // remaining shards go to the workers (≤ threads − 1 of
-                // them, since chunk = ⌈rows / threads⌉)
-                let mut off = take0;
-                let mut sent = 0usize;
-                while off < rows {
-                    let take = chunk.min(rows - off);
-                    let (o, r) = std::mem::take(&mut rest_out).split_at_mut(take * cout);
-                    rest_out = r;
-                    let (p, rp) = rest_p.split_at(take * s.k);
-                    rest_p = rp;
-                    let shard = Shard {
-                        patches: p.as_ptr(),
-                        patches_len: p.len(),
-                        out: o.as_mut_ptr(),
-                        out_len: o.len(),
-                        packed: packed as *const PackedPairing,
-                        bias: bias.as_ptr(),
-                        bias_len: bias.len(),
-                        k: s.k,
-                    };
-                    pool.job_txs[sent].send(shard).expect("conv-engine worker died");
-                    sent += 1;
-                    off += take;
-                }
-                compute_rows(p0, s.k, packed, bias, out0);
-                for _ in 0..sent {
-                    pool.done_rx.recv().expect("conv-engine worker died");
-                }
-            }
-        }
-
-        // (rows, Cout) → (B, Cout, OH, OW)
-        let (b, oh, ow) = (s.batch, s.out_h, s.out_w);
-        out.resize(rows * cout, 0.0);
-        for bi in 0..b {
-            for y in 0..oh {
-                for xw in 0..ow {
-                    let r = (bi * oh + y) * ow + xw;
-                    for c in 0..cout {
-                        out[((bi * cout + c) * oh + y) * ow + xw] =
-                            scratch.rowmajor[r * cout + c];
-                    }
-                }
-            }
-        }
-
+        let mut rowmajor = vec![0.0; rows * cout];
+        compute_rows(&patches, s.k, packed, bias.data(), &mut rowmajor);
+        let mut out = vec![0.0; rows * cout];
+        rowmajor_to_nchw(&rowmajor, s.batch, cout, s.out_h, s.out_w, &mut out);
         let counts = OpCounts::paired_layer(
             packed.total_pairs() as u64,
             packed.total_unpaired() as u64,
             rows as u64,
             (rows * cout) as u64,
         );
-        Ok((ConvOutShape { batch: b, cout, out_h: oh, out_w: ow }, counts))
+        Ok((Tensor::new(&[s.batch, cout, s.out_h, s.out_w], out), counts))
+    }
+}
+
+/// Transpose the engine's `(rows, Cout)` row-major intermediate into the
+/// NCHW output layout, rows ordered `(b, oy, ox)`.
+fn rowmajor_to_nchw(rowmajor: &[f32], b: usize, cout: usize, oh: usize, ow: usize, out: &mut [f32]) {
+    for bi in 0..b {
+        for y in 0..oh {
+            for xw in 0..ow {
+                let r = (bi * oh + y) * ow + xw;
+                for c in 0..cout {
+                    out[((bi * cout + c) * oh + y) * ow + xw] = rowmajor[r * cout + c];
+                }
+            }
+        }
     }
 }
 
@@ -445,15 +624,30 @@ impl Drop for ConvEngine {
 }
 
 fn worker_loop(rx: Receiver<Shard>, done: Sender<()>) {
+    // Per-worker streaming im2col strip, reused across jobs: it grows to
+    // the largest `tile · k_len` seen, then steady-state shards allocate
+    // nothing (pinned by rust/tests/alloc_plan.rs for the serial path;
+    // the worker path follows the same discipline).
+    let mut strip: Vec<f32> = Vec::new();
     while let Ok(shard) = rx.recv() {
         // Safety: the dispatcher holds the engine lock and blocks until
         // our done token arrives, so these views outlive this block; the
         // out region is exclusively ours (split_at_mut).
         unsafe {
-            let patches = std::slice::from_raw_parts(shard.patches, shard.patches_len);
+            let x = std::slice::from_raw_parts(shard.x, shard.x_len);
             let out = std::slice::from_raw_parts_mut(shard.out, shard.out_len);
             let bias = std::slice::from_raw_parts(shard.bias, shard.bias_len);
-            compute_rows(patches, shard.k, &*shard.packed, bias, out);
+            compute_shard(
+                x,
+                &shard.shape,
+                shard.geo,
+                shard.row0,
+                &*shard.packed,
+                bias,
+                shard.tile,
+                &mut strip,
+                out,
+            );
         }
         if done.send(()).is_err() {
             break;
@@ -461,13 +655,42 @@ fn worker_loop(rx: Receiver<Shard>, done: Sender<()>) {
     }
 }
 
-/// The shared kernel: paired conv over a contiguous block of im2col
-/// rows. Every path through the engine — serial, caller shard, worker
-/// shard — runs exactly this code in exactly this order, which is what
-/// makes thread counts bit-identical (strict f32 + fixed summation
-/// order). The zip/sum shapes mirror the original `SubConv2d` hot loop,
-/// preserving its numerics; the slices now come from the packed layout,
-/// so the filter walk is contiguous.
+/// Run one contiguous row range `row0 .. row0 + out.len() / cout` of a
+/// layer: stream `tile`-row im2col strips from the input into `strip`
+/// and apply the tiled microkernel to each. Every path through the
+/// engine — serial, caller shard, worker shard — runs exactly this code,
+/// and each output element's reduction order is fixed inside
+/// [`compute_rows_tiled`], which is what makes thread counts *and* tile
+/// sizes bit-identical (tiling only regroups independent outputs).
+#[allow(clippy::too_many_arguments)]
+fn compute_shard(
+    xd: &[f32],
+    shape: &[usize; 4],
+    geo: ConvGeometry,
+    row0: usize,
+    packed: &PackedPairing,
+    bias: &[f32],
+    tile: usize,
+    strip: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let (k, cout) = (packed.k_len, packed.cout);
+    let rows = out.len() / cout;
+    let mut r = 0;
+    while r < rows {
+        let t = tile.min(rows - r);
+        im2col_rows_into(xd, shape, geo.kh, geo.kw, geo.stride, geo.pad, row0 + r, t, strip);
+        compute_rows_tiled(&strip[..t * k], k, packed, bias, &mut out[r * cout..(r + t) * cout]);
+        r += t;
+    }
+}
+
+/// The untiled reference kernel: paired conv over a contiguous block of
+/// im2col rows, rows outer / filters inner. Each output element is
+/// `bias[c] + Σ k·(I1 − I2) + Σ w·I` with both lanes summed in table
+/// order — [`compute_rows_tiled`] reproduces exactly this per-element
+/// reduction, so the two kernels are bit-identical. The zip/sum shapes
+/// mirror the original `SubConv2d` hot loop, preserving its numerics.
 fn compute_rows(patches: &[f32], k: usize, packed: &PackedPairing, bias: &[f32], out: &mut [f32]) {
     let cout = packed.cout;
     let rows = out.len() / cout;
@@ -489,6 +712,92 @@ fn compute_rows(patches: &[f32], k: usize, packed: &PackedPairing, bias: &[f32],
             out[r * cout + c] = bias[c] + pair_acc + mac_acc;
         }
     }
+}
+
+/// The tile-blocked microkernel: same math as [`compute_rows`], loop
+/// nest interchanged to filters outer / rows inner, so each filter's CSR
+/// tap slices (and its bias) are loaded **once per tile** instead of
+/// once per row — on tap-heavy layers that turns a bandwidth-bound loop
+/// into an arithmetic-bound one. `patches` is one streaming strip of
+/// `out.len() / cout` rows.
+///
+/// Bit-identity: the expression computing `out[r·cout + c]` — pair lane
+/// summed in table order, then MAC lane, then `bias + pair + mac` — is
+/// token-for-token the reference kernel's; only the order independent
+/// output elements are *visited* in changes, and strict f32 makes each
+/// element's value a function of its own reduction order alone.
+///
+/// Safety of the unchecked gathers: every index in the tap tables is
+/// `< k_len` (asserted once in [`PackedPairing::from_layer`]) and every
+/// `patch` row here is exactly `k == k_len` long (the engine rejects
+/// mismatched inputs with [`SubaccelError::KernelMismatch`] before
+/// dispatch); `debug_assert!` restates the proof in debug builds.
+fn compute_rows_tiled(
+    patches: &[f32],
+    k: usize,
+    packed: &PackedPairing,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    let cout = packed.cout;
+    let rows = out.len() / cout;
+    debug_assert_eq!(k, packed.k_len);
+    debug_assert!(patches.len() >= rows * k);
+    for c in 0..cout {
+        let (i1, i2, kk) = packed.pairs(c);
+        let (ui, uw) = packed.unpaired(c);
+        let bc = bias[c];
+        for r in 0..rows {
+            let patch = &patches[r * k..(r + 1) * k];
+            // subtractor lane: k·(I1 − I2) per combined pair
+            let pair_acc: f32 = i1
+                .iter()
+                .zip(i2)
+                .zip(kk)
+                .map(|((&a, &b), &kv)| {
+                    debug_assert!((a as usize) < patch.len() && (b as usize) < patch.len());
+                    unsafe {
+                        kv * (*patch.get_unchecked(a as usize) - *patch.get_unchecked(b as usize))
+                    }
+                })
+                .sum();
+            // ordinary MAC lane
+            let mac_acc: f32 = ui
+                .iter()
+                .zip(uw)
+                .map(|(&iu, &wv)| {
+                    debug_assert!((iu as usize) < patch.len());
+                    unsafe { wv * *patch.get_unchecked(iu as usize) }
+                })
+                .sum();
+            out[r * cout + c] = bc + pair_acc + mac_acc;
+        }
+    }
+}
+
+/// Per-layer row-tile heuristic, balancing two pressures:
+///
+/// * the strip (`R · k_len` floats) must stay L1-resident next to the
+///   current filter's tap slices — bound `R` by a ~24 KiB strip budget;
+/// * tap reuse only pays in proportion to tap-table size: layers whose
+///   per-filter tables already fit in a few cache lines (LeNet C1) gain
+///   nothing from deep tiles, while tap-heavy layers (AlexNet conv2-5,
+///   ~`avg_taps · 8` bytes per filter re-streamed per row before this
+///   change) want tiles deep enough to amortise the whole table walk.
+///
+/// `total_taps` is [`PackedPairing::total_taps`]. Always returns ≥ 1.
+pub fn tile_rows_heuristic(k_len: usize, cout: usize, total_taps: usize) -> usize {
+    const STRIP_BUDGET_FLOATS: usize = 6 * 1024; // 24 KiB of L1 for the strip
+    let by_l1 = (STRIP_BUDGET_FLOATS / k_len.max(1)).max(1);
+    let avg_tap_bytes = 8 * total_taps / cout.max(1);
+    let by_reuse = if avg_tap_bytes >= 4096 { 64 } else { 16 };
+    by_l1.min(by_reuse)
+}
+
+/// `SUBACCEL_TILE_ROWS` override, read once at engine construction.
+/// Unset, empty, unparsable, or zero values mean "use the heuristic".
+fn env_tile_rows() -> Option<usize> {
+    std::env::var("SUBACCEL_TILE_ROWS").ok()?.trim().parse().ok().filter(|&n| n > 0)
 }
 
 #[cfg(test)]
@@ -577,6 +886,92 @@ mod tests {
             .forward_packed(&p, &b, ConvGeometry::valid(3, 3), &x)
             .unwrap_err();
         assert_eq!(err, SubaccelError::KernelMismatch { expected_k: 18, got_k: 27 });
+    }
+
+    #[test]
+    fn zero_tile_rows_is_a_typed_config_error() {
+        match ConvEngine::with_tile_rows(1, 0) {
+            Err(SubaccelError::InvalidConfig { field, .. }) => assert_eq!(field, "tile_rows"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tile_sizes_are_bit_identical_to_reference() {
+        let mut rng = Rng::seed_from_u64(99);
+        let x = rand_t(&mut rng, &[2, 3, 12, 12]);
+        let w = rand_t(&mut rng, &[5, 3, 3, 3]);
+        let b = rand_t(&mut rng, &[5]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.05));
+        let geo = ConvGeometry { kh: 3, kw: 3, stride: 1, pad: 1 };
+        let (want, want_counts) = ConvEngine::forward_packed_reference(&p, &b, geo, &x).unwrap();
+        // rows = 2·12·12 = 288, so 1000 exercises the tile > rows case
+        for tile in [1usize, 2, 7, 64, 1000] {
+            for threads in [1usize, 3] {
+                let eng = ConvEngine::with_tile_rows(threads, tile).unwrap();
+                let (got, counts) = eng.forward_packed(&p, &b, geo, &x).unwrap();
+                assert_eq!(got.shape(), want.shape());
+                assert_eq!(got.data(), want.data(), "tile {tile} t={threads} diverged");
+                assert_eq!(counts, want_counts);
+            }
+        }
+    }
+
+    #[test]
+    fn tile_heuristic_is_bounded() {
+        // strip stays within the L1 budget and the tile is never zero
+        for (k_len, cout, taps) in
+            [(1, 1, 0), (25, 6, 60), (150, 16, 2000), (2400, 256, 600_000), (100_000, 4, 10)]
+        {
+            let t = tile_rows_heuristic(k_len, cout, taps);
+            assert!(t >= 1, "tile must be >= 1");
+            assert!(
+                t == 1 || t * k_len <= 64 * 1024,
+                "strip {t}x{k_len} floats blows the cache budget"
+            );
+        }
+        // at equal k_len, a tap-heavy layer gets a deeper tile than a
+        // tap-light one (reuse only pays when the tables are big)
+        assert!(tile_rows_heuristic(150, 16, 100_000) > tile_rows_heuristic(150, 16, 60));
+    }
+
+    #[test]
+    fn padded_tables_match_filter_layout() {
+        let mut rng = Rng::seed_from_u64(47);
+        let w = rand_t(&mut rng, &[4, 2, 3, 3]);
+        let lp = LayerPairing::from_weights(&w, 0.1);
+        let p = PackedPairing::from_layer(&lp);
+        let pmax = lp.filters.iter().map(|f| f.n_pairs()).max().unwrap() + 1;
+        let umax = lp.filters.iter().map(|f| f.n_unpaired()).max().unwrap() + 2;
+        let t = p.padded_tables(pmax, umax).unwrap();
+        assert_eq!(t.pair_i1.len(), 4 * pmax);
+        assert_eq!(t.unp_w.len(), 4 * umax);
+        for (c, f) in lp.filters.iter().enumerate() {
+            for (j, &a) in f.pair_i1.iter().enumerate() {
+                assert_eq!(t.pair_i1[c * pmax + j], a as i32);
+                assert_eq!(t.pair_i2[c * pmax + j], f.pair_i2[j] as i32);
+                assert_eq!(t.pair_k[c * pmax + j], f.pair_k[j]);
+            }
+            // padding lanes: index 0, weight 0.0
+            for j in f.n_pairs()..pmax {
+                assert_eq!(t.pair_i1[c * pmax + j], 0);
+                assert_eq!(t.pair_k[c * pmax + j], 0.0);
+            }
+            for (j, &iu) in f.unp_idx.iter().enumerate() {
+                assert_eq!(t.unp_idx[c * umax + j], iu as i32);
+                assert_eq!(t.unp_w[c * umax + j], f.unp_w[j]);
+            }
+            for j in f.n_unpaired()..umax {
+                assert_eq!(t.unp_w[c * umax + j], 0.0);
+            }
+        }
+        // undersized tables are a typed error, not silent truncation
+        match p.padded_tables(0, umax) {
+            Err(SubaccelError::InvalidConfig { field, .. }) => {
+                assert_eq!(field, "padded_tables");
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
     }
 
     #[test]

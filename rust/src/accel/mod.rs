@@ -10,8 +10,9 @@
 //!   identical to dense conv with modified weights (unit + prop tested).
 //! * [`engine`] — the execution engine behind [`subconv`]: the
 //!   structure-of-arrays [`PackedPairing`] layout and the multi-threaded
-//!   [`ConvEngine`] worker pool with reusable scratch (zero steady-state
-//!   allocation; bit-identical across thread counts).
+//!   [`ConvEngine`] worker pool, running a tile-blocked microkernel fed
+//!   by streaming im2col strips (zero steady-state allocation;
+//!   bit-identical across thread counts and tile sizes).
 //! * [`opcount`] — Table-1 accounting over a whole model for a rounding
 //!   sweep.
 //! * [`stats`] — weight-distribution statistics (Fig 3 / Fig 4).
@@ -24,7 +25,9 @@ mod stats;
 mod subconv;
 
 pub use ablation::{pair_filter_closest_first, total_snap_error};
-pub use engine::{ConvEngine, ConvGeometry, ConvOutShape, PackedPairing};
+pub use engine::{
+    tile_rows_heuristic, ConvEngine, ConvGeometry, ConvOutShape, PackedPairing, PaddedTables,
+};
 pub use opcount::{model_op_sweep, model_ops, ModelOps, TABLE1_ROUNDINGS};
 pub use preprocess::{pair_filter, FilterPairing, LayerPairing, WeightClass};
 pub use stats::{histogram, Histogram, WeightStats};

@@ -94,6 +94,11 @@ impl SubConv2d {
         self.pairing.total_pairs()
     }
 
+    /// Total uncombined (ordinary MAC lane) taps across filters.
+    pub fn total_unpaired(&self) -> usize {
+        self.packed.total_unpaired()
+    }
+
     /// Run the layer on an NCHW input using the process-wide serial
     /// engine. Panics on shape mismatch (historical API; use
     /// [`SubConv2d::try_forward`] or [`SubConv2d::forward_with`] for

@@ -48,6 +48,36 @@ impl Batcher {
     pub fn deadline(&self, oldest: Option<Instant>) -> Option<Instant> {
         oldest.map(|t| t + self.max_wait)
     }
+
+    /// The padded batch sizes a shape-flexible backend can see: powers
+    /// of two below `max_batch`, plus `max_batch` itself. Deadline
+    /// flushes under low load pad a partial batch up to the smallest of
+    /// these that holds it ([`Batcher::padded_size`]) instead of always
+    /// the full `max_batch` — small bounded set, so a backend can
+    /// pre-warm one plan executor per size and stay allocation-free for
+    /// every batch the coordinator will ever emit.
+    pub fn padded_sizes(&self) -> Vec<usize> {
+        let mut sizes = Vec::new();
+        let mut s = 1usize;
+        while s < self.max_batch {
+            sizes.push(s);
+            s *= 2;
+        }
+        sizes.push(self.max_batch);
+        sizes
+    }
+
+    /// Smallest emitted padded size that holds `n` requests; always one
+    /// of [`Batcher::padded_sizes`] (inputs beyond `max_batch` clamp to
+    /// `max_batch` — the batcher never drains more than that at once).
+    pub fn padded_size(&self, n: usize) -> usize {
+        let n = n.min(self.max_batch);
+        let mut s = 1usize;
+        while s < n {
+            s *= 2;
+        }
+        s.min(self.max_batch)
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +145,29 @@ mod tests {
         let t0 = Instant::now();
         let almost = t0 + Duration::from_millis(10) - Duration::from_nanos(1);
         assert_eq!(b().decide(1, Some(t0), almost), BatchPlan::Wait);
+    }
+
+    #[test]
+    fn padded_sizes_are_powers_of_two_up_to_max() {
+        assert_eq!(b().padded_sizes(), vec![1, 2, 4]); // max_batch 4
+        assert_eq!(Batcher::new(6, Duration::ZERO).padded_sizes(), vec![1, 2, 4, 6]);
+        assert_eq!(Batcher::new(1, Duration::ZERO).padded_sizes(), vec![1]);
+        assert_eq!(Batcher::new(32, Duration::ZERO).padded_sizes(), vec![1, 2, 4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn padded_size_is_smallest_emitted_cover() {
+        let six = Batcher::new(6, Duration::ZERO);
+        assert_eq!(six.padded_size(1), 1);
+        assert_eq!(six.padded_size(2), 2);
+        assert_eq!(six.padded_size(3), 4);
+        assert_eq!(six.padded_size(5), 6); // 8 > max_batch → clamp
+        assert_eq!(six.padded_size(6), 6);
+        assert_eq!(six.padded_size(100), 6);
+        // every answer is in padded_sizes()
+        for n in 1..=12 {
+            assert!(six.padded_sizes().contains(&six.padded_size(n)), "n={n}");
+        }
     }
 
     #[test]

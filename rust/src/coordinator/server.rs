@@ -276,10 +276,13 @@ impl Coordinator {
         // --- batcher thread ----------------------------------------------
         let policy = Batcher::new(cfg.batch_size, cfg.max_wait);
         let bmetrics = metrics.clone();
-        let batch_size = cfg.batch_size;
+        // PJRT artifacts are compiled for one fixed batch shape, so every
+        // partial batch zero-pads to it; the CPU engine is shape-flexible
+        // and takes partial batches at the nearest pre-warmed padded size
+        let flexible = matches!(cfg.backend, Backend::CpuEngine);
         let batcher = std::thread::Builder::new()
             .name("batcher".into())
-            .spawn(move || batcher_loop(policy, batch_size, req_rx, work_tx, bmetrics))
+            .spawn(move || batcher_loop(policy, flexible, req_rx, work_tx, bmetrics))
             .context("spawn batcher thread")?;
 
         Ok(Self { tx: req_tx, ctls, metrics, batcher: Some(batcher), workers })
@@ -430,9 +433,13 @@ fn worker_loop(
             Backend::CpuEngine => {
                 let engine = Arc::new(ConvEngine::new(cfg.engine_threads)?);
                 let mut cpu = PairedCpuLeNet5::new(engine, &base, cfg.rounding)?;
-                // one warmed plan per replica, keyed by the serving batch
-                // size: the first real batch already runs allocation-free
-                cpu.warm(cfg.batch_size)?;
+                // pre-warm one plan per padded size the batcher can emit
+                // under low load (powers of two up to the configured
+                // batch), so even deadline-flushed partial batches run
+                // allocation-free from the first request
+                for b in Batcher::new(cfg.batch_size, cfg.max_wait).padded_sizes() {
+                    cpu.warm(b)?;
+                }
                 WorkerExec::Cpu(cpu)
             }
         };
@@ -489,15 +496,18 @@ fn worker_loop(
     }
 }
 
-/// Batcher thread: size-or-deadline grouping, zero-padding partial batches
-/// to the compiled batch size. Exits when the request channel closes.
+/// Batcher thread: size-or-deadline grouping. Partial batches zero-pad
+/// to the compiled batch size on fixed-shape backends, or to the
+/// smallest pre-warmed [`Batcher::padded_size`] on shape-flexible ones.
+/// Exits when the request channel closes.
 fn batcher_loop(
     policy: Batcher,
-    batch_size: usize,
+    flexible: bool,
     rx: mpsc::Receiver<Request>,
     work_tx: mpsc::Sender<WorkBatch>,
     metrics: Arc<ServerMetrics>,
 ) {
+    let batch_size = policy.max_batch;
     let mut pending: Vec<Request> = Vec::with_capacity(batch_size);
     let mut closed = false;
     while !(closed && pending.is_empty()) {
@@ -532,15 +542,20 @@ fn batcher_loop(
 
         let take = pending.len().min(batch_size);
         let batch: Vec<Request> = pending.drain(..take).collect();
-        let mut data = Vec::with_capacity(batch_size * 32 * 32);
+        // fixed-shape backends (PJRT) always pad to the compiled batch;
+        // shape-flexible ones take the smallest pre-warmed padded size
+        // that holds the batch, so low-load partials run ~batch-size
+        // cheaper instead of paying for a full batch every deadline
+        let padded = if flexible { policy.padded_size(batch.len()) } else { batch_size };
+        let mut data = Vec::with_capacity(padded * 32 * 32);
         for r in &batch {
             metrics.queue_latency.record(r.submitted.elapsed());
             data.extend_from_slice(r.image.data());
         }
-        data.resize(batch_size * 32 * 32, 0.0); // zero-pad to compiled size
+        data.resize(padded * 32 * 32, 0.0); // zero-pad to the batch shape
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batched_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        let images = Tensor::new(&[batch_size, 1, 32, 32], data);
+        let images = Tensor::new(&[padded, 1, 32, 32], data);
         if work_tx.send(WorkBatch { images, replies: batch }).is_err() {
             return; // executors gone
         }

@@ -302,8 +302,10 @@ impl PlanExecutor {
 
     /// Pre-grow both scratch buffers to the plan's arena size, so even
     /// the first forward performs no activation-buffer growth. (The
-    /// engine's own im2col scratch still warms on the first call through
-    /// a given [`ConvEngine`].)
+    /// engine's own scratch — the streaming im2col strip, `tile · k_len`
+    /// floats rather than a full patch matrix, plus the row-major
+    /// intermediate — still warms on the first call through a given
+    /// [`ConvEngine`].)
     pub fn warm(&mut self) {
         let n = self.plan.max_elems;
         self.cur.resize(n, 0.0);
@@ -475,6 +477,22 @@ mod tests {
         let _ = exec.infer(&engine, &b).unwrap();
         let ya2 = exec.infer(&engine, &a).unwrap();
         assert_eq!(ya1, ya2, "buffer reuse changed results");
+    }
+
+    #[test]
+    fn plan_results_are_tile_invariant() {
+        // whole-network outputs are bit-identical across row-tile sizes
+        // and thread counts (the engine's tiling must be invisible here)
+        let mut rng = Rng::seed_from_u64(23);
+        let x = randt(&mut rng, &[2, 1, 32, 32]);
+        let mut exec =
+            ExecutionPlan::compile(&lenet5(), 0.05, &[2, 1, 32, 32]).unwrap().into_executor();
+        let want = exec.infer(&ConvEngine::serial(), &x).unwrap();
+        for tile in [1usize, 3, 8, 64, 4096] {
+            let eng = ConvEngine::with_tile_rows(2, tile).unwrap();
+            let got = exec.infer(&eng, &x).unwrap();
+            assert_eq!(got, want, "tile {tile} diverged through the plan path");
+        }
     }
 
     #[test]

@@ -176,28 +176,33 @@ pub fn conv2d_into(
         // Fast path (hot in every sweep): contiguous row dot-products, no
         // per-tap bounds checks. ~2× over the general path (see
         // EXPERIMENTS.md §Perf).
+        // Loop nest interchanged to keep the weight row hoisted across a
+        // whole output row — the same row-blocking idea as the paired
+        // engine's microkernel (`accel::engine`). Each output element
+        // still accumulates its (ci, dy) row dot-products in the same
+        // order as the naive nest, so results are bit-identical.
         for bi in 0..bs {
             for co in 0..cout {
                 let wbase = co * cin * kh * kw;
                 for oy in 0..oh {
                     let iy0 = oy * stride;
-                    for ox in 0..ow {
-                        let ix0 = ox * stride;
-                        let mut acc = bd[co];
-                        for ci in 0..cin {
-                            let xc = (bi * cin + ci) * h * win;
-                            let wc = wbase + ci * kh * kw;
-                            for dy in 0..kh {
-                                let xrow = &xd[xc + (iy0 + dy) * win + ix0..][..kw];
-                                let wrow = &wd[wc + dy * kw..][..kw];
-                                acc += xrow
+                    let orow = ((bi * cout + co) * oh + oy) * ow;
+                    out[orow..orow + ow].fill(bd[co]);
+                    for ci in 0..cin {
+                        let xc = (bi * cin + ci) * h * win;
+                        let wc = wbase + ci * kh * kw;
+                        for dy in 0..kh {
+                            let xrow0 = xc + (iy0 + dy) * win;
+                            let wrow = &wd[wc + dy * kw..][..kw];
+                            for ox in 0..ow {
+                                let xrow = &xd[xrow0 + ox * stride..][..kw];
+                                out[orow + ox] += xrow
                                     .iter()
                                     .zip(wrow)
                                     .map(|(a, b)| a * b)
                                     .sum::<f32>();
                             }
                         }
-                        out[((bi * cout + co) * oh + oy) * ow + ox] = acc;
                     }
                 }
             }

@@ -201,6 +201,26 @@ impl PairedModel {
     pub fn infer_with(&self, engine: &ConvEngine, x: &Tensor) -> Result<Tensor, SubaccelError> {
         Ok(self.forward_with(engine, x)?.0)
     }
+
+    /// Per-step wall-clock profile `(name, seconds, counts)` of one
+    /// forward on the given engine — the paired counterpart of
+    /// [`Model::profile`], routed through the plan-level
+    /// [`PlanExecutor::profile`] so both paths report identical
+    /// per-step instrumentation (same step names, static counts).
+    /// Runs on the cached plan executor for `x`'s shape.
+    pub fn profile_with(
+        &self,
+        engine: &ConvEngine,
+        x: &Tensor,
+    ) -> Result<Vec<(String, f64, OpCounts)>, SubaccelError> {
+        let mut execs = self.execs.lock().expect("plan cache lock");
+        if !execs.contains_key(x.shape()) {
+            let exec = self.net.plan(x.shape())?.into_executor();
+            execs.insert(x.shape().to_vec(), exec);
+        }
+        let exec = execs.get_mut(x.shape()).expect("just inserted");
+        exec.profile(engine, x)
+    }
 }
 
 /// Geometry + parameters of one conv layer, as consumed by Algorithm 1.
@@ -476,6 +496,30 @@ mod tests {
         let a = lenet5().infer(&Tensor::full(&[1, 1, 32, 32], 0.3));
         let b = lenet5().infer(&Tensor::full(&[1, 1, 32, 32], 0.3));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn paired_profile_reports_plan_steps_and_static_counts() {
+        let m = lenet5();
+        let pm = PairedModel::compile(&m, 0.05);
+        let mut rng = Rng::seed_from_u64(19);
+        let x = randt(&mut rng, &[1, 1, 32, 32], 1.0);
+        let prof = pm.profile_with(&ConvEngine::serial(), &x).unwrap();
+        // same step names as the plan path, and the dense profile's
+        // layer granularity (8 LeNet-5 steps)
+        assert_eq!(prof.len(), 8);
+        let plan = pm.compiled().plan(&[1, 1, 32, 32]).unwrap();
+        for ((name, secs, counts), step) in prof.iter().zip(plan.steps()) {
+            assert_eq!(name, step.name());
+            assert_eq!(*counts, step.counts());
+            assert!(*secs >= 0.0);
+        }
+        // summed profile counts == forward counts (both are the static
+        // plan counts — profiling changes instrumentation, not math)
+        let (_, fwd) = pm.forward_with(&ConvEngine::serial(), &x).unwrap();
+        let profiled_subs: u64 = prof.iter().map(|(_, _, c)| c.subs).sum();
+        let fwd_subs: u64 = fwd.per_layer.iter().map(|(_, c)| c.subs).sum();
+        assert_eq!(profiled_subs, fwd_subs);
     }
 
     #[test]

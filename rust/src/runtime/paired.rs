@@ -14,7 +14,7 @@
 //!   executors, so the steady-state loop is allocation-free.
 
 use super::{tensor_to_literal, Executable, Runtime};
-use crate::accel::{ConvEngine, LayerPairing};
+use crate::accel::{ConvEngine, LayerPairing, PackedPairing};
 use crate::exec::{CompiledNet, PlanExecutor};
 use crate::nn::lenet5_try_from_params;
 use crate::nn::params::{bias_key, weight_key};
@@ -72,6 +72,11 @@ impl PairedLeNet5Executor {
     }
 
     /// Run Algorithm 1 per conv layer and cache the padded table literals.
+    ///
+    /// The padding itself lives with the packed layout
+    /// ([`PackedPairing::padded_tables`], shared with the engine and its
+    /// tests) — this runtime only reshapes the shared tables into XLA
+    /// literals in the artifact's argument order.
     pub fn install(&mut self, weights: &HashMap<String, Tensor>, rounding: f32) -> Result<()> {
         let mut lits = Vec::new();
         let mut pairs_per_layer = Vec::new();
@@ -80,35 +85,19 @@ impl PairedLeNet5Executor {
             let bk = bias_key(name);
             let w = weights.get(&wk).with_context(|| format!("missing {wk}"))?;
             let b = weights.get(&bk).with_context(|| format!("missing {bk}"))?;
-            let pairing = LayerPairing::from_weights(w, rounding);
-            pairs_per_layer.push(pairing.total_pairs());
-            let cout = w.shape()[0];
-            let mut i1 = vec![0i32; cout * pmax];
-            let mut i2 = vec![0i32; cout * pmax];
-            let mut pk = vec![0f32; cout * pmax];
-            let mut iu = vec![0i32; cout * umax];
-            let mut wu = vec![0f32; cout * umax];
-            for (c, f) in pairing.filters.iter().enumerate() {
-                if f.n_pairs() > pmax || f.n_unpaired() > umax {
-                    bail!("{name}: pairing exceeds artifact table sizes");
-                }
-                for j in 0..f.n_pairs() {
-                    i1[c * pmax + j] = f.pair_i1[j] as i32;
-                    i2[c * pmax + j] = f.pair_i2[j] as i32;
-                    pk[c * pmax + j] = f.pair_k[j];
-                }
-                for j in 0..f.n_unpaired() {
-                    iu[c * umax + j] = f.unp_idx[j] as i32;
-                    wu[c * umax + j] = f.unp_w[j];
-                }
-            }
+            let packed = PackedPairing::from_layer(&LayerPairing::from_weights(w, rounding));
+            pairs_per_layer.push(packed.total_pairs());
+            let t = packed
+                .padded_tables(pmax, umax)
+                .with_context(|| format!("{name}: pairing exceeds artifact table sizes"))?;
+            let cout = packed.cout();
             let dims_p = [cout as i64, pmax as i64];
             let dims_u = [cout as i64, umax as i64];
-            lits.push(xla::Literal::vec1(&i1).reshape(&dims_p)?);
-            lits.push(xla::Literal::vec1(&i2).reshape(&dims_p)?);
-            lits.push(xla::Literal::vec1(&pk).reshape(&dims_p)?);
-            lits.push(xla::Literal::vec1(&iu).reshape(&dims_u)?);
-            lits.push(xla::Literal::vec1(&wu).reshape(&dims_u)?);
+            lits.push(xla::Literal::vec1(&t.pair_i1).reshape(&dims_p)?);
+            lits.push(xla::Literal::vec1(&t.pair_i2).reshape(&dims_p)?);
+            lits.push(xla::Literal::vec1(&t.pair_k).reshape(&dims_p)?);
+            lits.push(xla::Literal::vec1(&t.unp_idx).reshape(&dims_u)?);
+            lits.push(xla::Literal::vec1(&t.unp_w).reshape(&dims_u)?);
             lits.push(tensor_to_literal(b)?);
         }
         for key in ["f6_w", "f6_b", "out_w", "out_b"] {

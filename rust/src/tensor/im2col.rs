@@ -168,6 +168,84 @@ pub fn im2col_slice_into(
     s
 }
 
+/// Streaming row-strip extraction: materialise only patch rows
+/// `row0 .. row0 + nrows` of the full `(B·OH·OW, K)` matrix into `out`
+/// (resized to `nrows * k` and fully overwritten).
+///
+/// This is the tile feed of the blocked engine kernel
+/// ([`crate::accel::ConvEngine`]): instead of building the whole patch
+/// matrix up front, each shard streams one small L1-resident strip per
+/// row tile. Row `row0 + i` of the strip holds exactly the values the
+/// full-matrix path would place at row `row0 + i` — copies of the same
+/// input elements in the same `(c, dy, dx)` order — so consuming strips
+/// is bit-identical to consuming the full matrix.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_rows_into(
+    xd: &[f32],
+    shape: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    row0: usize,
+    nrows: usize,
+    out: &mut Vec<f32>,
+) -> Im2colShape {
+    let s = im2col_shape(shape, kh, kw, stride, pad);
+    assert!(
+        row0 + nrows <= s.rows,
+        "row strip {row0}+{nrows} out of range ({} rows)",
+        s.rows
+    );
+    let (c, h, w) = (shape[1], shape[2], shape[3]);
+    debug_assert_eq!(xd.len(), shape[0] * c * h * w, "data length vs shape {shape:?}");
+    let (oh, ow) = (s.out_h, s.out_w);
+    let k = s.k;
+    out.resize(nrows * k, 0.0);
+
+    for i in 0..nrows {
+        // global row index → (batch, output y, output x)
+        let r = row0 + i;
+        let bi = r / (oh * ow);
+        let rem = r % (oh * ow);
+        let (oy, ox) = (rem / ow, rem % ow);
+        let row = i * k;
+        let (iy0, ix0) = (oy * stride, ox * stride);
+        let mut col = 0;
+        if pad == 0 {
+            // Fast path: every tap is in bounds — contiguous row copies.
+            for ci in 0..c {
+                let base = ((bi * c + ci) * h + iy0) * w + ix0;
+                for dy in 0..kh {
+                    let src = base + dy * w;
+                    out[row + col..row + col + kw].copy_from_slice(&xd[src..src + kw]);
+                    col += kw;
+                }
+            }
+        } else {
+            // Padded path: out-of-bounds taps read as zero. Every slot
+            // is written, so a reused strip never leaks stale values.
+            for ci in 0..c {
+                let base = (bi * c + ci) * h * w;
+                for dy in 0..kh {
+                    let iy = iy0 + dy;
+                    for dx in 0..kw {
+                        let ix = ix0 + dx;
+                        out[row + col] = if iy < pad || iy >= h + pad || ix < pad || ix >= w + pad
+                        {
+                            0.0
+                        } else {
+                            xd[base + (iy - pad) * w + (ix - pad)]
+                        };
+                        col += 1;
+                    }
+                }
+            }
+        }
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,6 +320,42 @@ mod tests {
         let b = im2col_geo(&x, 3, 2, 1, 0);
         assert_eq!(a.patches.data(), b.patches.data());
         assert_eq!((a.out_h, a.out_w), (b.out_h, b.out_w));
+    }
+
+    #[test]
+    fn row_strips_match_full_matrix() {
+        // every (geometry, strip placement) agrees element-for-element
+        // with the corresponding rows of the full patch matrix
+        let x = Tensor::new(&[2, 3, 7, 6], (0..252).map(|v| v as f32 * 0.25 - 13.0).collect());
+        for (kh, kw, stride, pad) in [(3, 3, 1, 0), (3, 2, 2, 0), (3, 3, 1, 1), (5, 5, 2, 2)] {
+            let mut full = Vec::new();
+            let s = im2col_into(&x, kh, kw, stride, pad, &mut full);
+            let mut strip = vec![77.0; 3]; // stale garbage must be overwritten
+            for nrows in [1usize, 3, s.rows] {
+                let mut row0 = 0;
+                while row0 < s.rows {
+                    let n = nrows.min(s.rows - row0);
+                    let got = im2col_rows_into(
+                        x.data(), x.shape(), kh, kw, stride, pad, row0, n, &mut strip,
+                    );
+                    assert_eq!(got, s);
+                    assert_eq!(
+                        &strip[..n * s.k],
+                        &full[row0 * s.k..(row0 + n) * s.k],
+                        "strip [{row0}, {row0}+{n}) diverged (k{kh}x{kw} s{stride} p{pad})"
+                    );
+                    row0 += n;
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn row_strip_past_end_panics() {
+        let x = Tensor::zeros(&[1, 1, 3, 3]);
+        let mut strip = Vec::new();
+        im2col_rows_into(x.data(), x.shape(), 2, 2, 1, 0, 3, 2, &mut strip);
     }
 
     #[test]

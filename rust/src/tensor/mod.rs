@@ -8,7 +8,8 @@
 mod im2col;
 
 pub use im2col::{
-    im2col, im2col_geo, im2col_into, im2col_shape, im2col_slice_into, Im2col, Im2colShape,
+    im2col, im2col_geo, im2col_into, im2col_rows_into, im2col_shape, im2col_slice_into, Im2col,
+    Im2colShape,
 };
 
 use std::fmt;

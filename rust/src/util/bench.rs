@@ -100,6 +100,91 @@ pub fn header() -> String {
     )
 }
 
+/// Machine-readable bench trajectory. A bench target builds one
+/// [`JsonReport`] (enabled when `SUBACCEL_BENCH_JSON` names an output
+/// path), records selected results with numeric metadata (ops/iter,
+/// threads, tile rows, …), and writes them as a JSON array at the end.
+/// `scripts/check.sh --smoke` wires this up for `conv_hotpath` so every
+/// PR leaves a `BENCH_8.json`-style perf data point behind. Each record
+/// carries a `smoke` flag: smoke-mode numbers prove shape, not speed.
+///
+/// Hand-rolled serialisation (no serde in the vendored set): flat
+/// objects of string `name` + integer/float fields only.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    path: Option<String>,
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    /// Enabled iff `SUBACCEL_BENCH_JSON` is set (its value is the output
+    /// path); otherwise every method is a no-op — benches call
+    /// unconditionally.
+    pub fn from_env() -> Self {
+        Self { path: std::env::var("SUBACCEL_BENCH_JSON").ok(), entries: Vec::new() }
+    }
+
+    /// A report writing to a fixed path regardless of the environment
+    /// (tests).
+    pub fn to_path(path: impl Into<String>) -> Self {
+        Self { path: Some(path.into()), entries: Vec::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.path.is_some()
+    }
+
+    /// Record one result plus numeric metadata, e.g.
+    /// `&[("ops", 1.2e6), ("threads", 4.0), ("tile_rows", 16.0)]`.
+    pub fn push(&mut self, r: &BenchResult, meta: &[(&str, f64)]) {
+        if self.path.is_none() {
+            return;
+        }
+        let mut e = format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{},\"median_ns\":{},\"min_ns\":{},\"stddev_ns\":{},\"smoke\":{}",
+            json_escape(&r.name),
+            r.iters,
+            r.mean.as_nanos(),
+            r.median.as_nanos(),
+            r.min.as_nanos(),
+            r.stddev.as_nanos(),
+            smoke(),
+        );
+        for (key, v) in meta {
+            e.push_str(&format!(",\"{}\":{}", json_escape(key), json_f64(*v)));
+        }
+        e.push('}');
+        self.entries.push(e);
+    }
+
+    /// Write the collected records as a JSON array; returns the path
+    /// written, or `None` when disabled.
+    pub fn finish(&self) -> std::io::Result<Option<&str>> {
+        match &self.path {
+            None => Ok(None),
+            Some(p) => {
+                let body = format!("[\n  {}\n]\n", self.entries.join(",\n  "));
+                std::fs::write(p, body)?;
+                Ok(Some(p.as_str()))
+            }
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_f64(v: f64) -> String {
+    if !v.is_finite() {
+        "null".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +214,39 @@ mod tests {
         let r = bench("sleepless", 0, 3, || std::thread::sleep(Duration::from_millis(1)));
         let t = r.throughput(100);
         assert!(t > 10.0 && t < 100_000.0, "{t}");
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("bench.json");
+        let mut rep = JsonReport::to_path(path.to_string_lossy());
+        assert!(rep.enabled());
+        let r = bench("json \"quoted\" name", 0, 2, || 1u32);
+        rep.push(&r, &[("ops", 12.0), ("threads", 1.0), ("tile_rows", 0.5)]);
+        let written = rep.finish().unwrap().expect("enabled report writes").to_string();
+        let body = std::fs::read_to_string(&written).unwrap();
+        assert!(body.trim_start().starts_with('['), "{body}");
+        assert!(body.trim_end().ends_with(']'), "{body}");
+        assert!(body.contains("\"ns_per_iter\":"), "{body}");
+        assert!(body.contains("\\\"quoted\\\""), "escaping: {body}");
+        assert!(body.contains("\"ops\":12,"), "{body}");
+        assert!(body.contains("\"tile_rows\":0.5"), "{body}");
+    }
+
+    #[test]
+    fn disabled_json_report_is_a_noop() {
+        let mut rep = JsonReport::default();
+        assert!(!rep.enabled());
+        let r = bench("noop", 0, 1, || 0u32);
+        rep.push(&r, &[("ops", 1.0)]);
+        assert_eq!(rep.finish().unwrap(), None);
+    }
+
+    #[test]
+    fn json_f64_forms() {
+        assert_eq!(json_f64(12.0), "12");
+        assert_eq!(json_f64(0.5), "0.5");
+        assert_eq!(json_f64(f64::NAN), "null");
     }
 }

@@ -49,27 +49,40 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 #[test]
 fn steady_state_forward_into_allocates_nothing() {
-    let engine = ConvEngine::serial();
-    let plan = ExecutionPlan::compile(&lenet5(), 0.05, &[2, 1, 32, 32]).unwrap();
-    let mut exe = plan.into_executor();
-    exe.warm();
-    let x = Tensor::full(&[2, 1, 32, 32], 0.3);
-    let mut out = Vec::new();
-    // warm-up: grows `out` and the engine's im2col scratch
-    let mut baseline = Vec::new();
-    for _ in 0..2 {
-        exe.forward_into(&engine, &x, &mut out).unwrap();
-        baseline = out.clone();
-    }
+    // Two single-threaded engines: the per-layer tile heuristic, and a
+    // forced 3-row tile — the latter refills the streaming im2col strip
+    // many times per layer, proving strip reuse (not just strip growth)
+    // is allocation-free. One test fn on purpose: the allocation counter
+    // is process-global, and parallel test threads would corrupt the
+    // before/after diffs.
+    for (label, engine) in [
+        ("heuristic tile", ConvEngine::serial()),
+        ("forced tile=3", ConvEngine::with_tile_rows(1, 3).unwrap()),
+    ] {
+        let plan = ExecutionPlan::compile(&lenet5(), 0.05, &[2, 1, 32, 32]).unwrap();
+        let mut exe = plan.into_executor();
+        exe.warm();
+        let x = Tensor::full(&[2, 1, 32, 32], 0.3);
+        let mut out = Vec::new();
+        // warm-up: grows `out` and the engine's im2col strip
+        let mut baseline = Vec::new();
+        for _ in 0..2 {
+            exe.forward_into(&engine, &x, &mut out).unwrap();
+            baseline = out.clone();
+        }
 
-    let before = ALLOCS.load(Ordering::SeqCst);
-    for _ in 0..5 {
-        let shape = exe.forward_into(&engine, &x, &mut out).unwrap();
-        assert_eq!(shape, &[2, 10]);
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..5 {
+            let shape = exe.forward_into(&engine, &x, &mut out).unwrap();
+            assert_eq!(shape, &[2, 10]);
+        }
+        let allocs = ALLOCS.load(Ordering::SeqCst) - before;
+        assert_eq!(
+            allocs, 0,
+            "[{label}] steady-state forward_into performed {allocs} heap allocations"
+        );
+        // and it still computes: same logits as the warm-up passes
+        assert_eq!(out.len(), 20);
+        assert_eq!(out, baseline, "[{label}] steady-state output diverged from warm-up output");
     }
-    let allocs = ALLOCS.load(Ordering::SeqCst) - before;
-    assert_eq!(allocs, 0, "steady-state forward_into performed {allocs} heap allocations");
-    // and it still computes: same logits as the warm-up passes
-    assert_eq!(out.len(), 20);
-    assert_eq!(out, baseline, "steady-state output diverged from warm-up output");
 }

@@ -56,6 +56,45 @@ fn parallel_forward_is_bit_identical_to_serial() {
 }
 
 #[test]
+fn tiled_kernel_is_bit_identical_to_reference() {
+    // The tile-blocked microkernel must reproduce the untiled reference
+    // (`forward_packed_reference`) bit-for-bit at every tile size —
+    // including degenerate tiles (1 row), tiles larger than any output
+    // (4096), and every thread count. Tiling and sharding only regroup
+    // independent outputs; each output's reduction order is fixed.
+    let tiles = [1usize, 3, 8, 64, 4096];
+    let engines: Vec<ConvEngine> = tiles
+        .iter()
+        .flat_map(|&t| [1usize, 4].map(|threads| ConvEngine::with_tile_rows(threads, t).unwrap()))
+        .collect();
+    forall("tiled-vs-reference", 0x711ED, 15, |g| {
+        let (weight, bias, x, _) = random_problem(g);
+        let rounding = [0.0f32, 0.05][g.rng.below(2)];
+        let unit = SubConv2d::compile(&weight, &bias, rounding);
+        let (want, want_counts) =
+            ConvEngine::forward_packed_reference(unit.packed(), unit.bias(), unit.geometry(), &x)
+                .map_err(|e| format!("reference: {e}"))?;
+        for engine in &engines {
+            let tile = engine.tile_rows().expect("explicit tile");
+            let (got, counts) = unit
+                .forward_with(engine, &x)
+                .map_err(|e| format!("tile {tile} t={}: {e}", engine.threads()))?;
+            if got != want {
+                return Err(format!(
+                    "tile {tile} t={}: diverged from reference (max |Δ| {})",
+                    engine.threads(),
+                    got.max_abs_diff(&want)
+                ));
+            }
+            if counts != want_counts {
+                return Err(format!("tile {tile} t={}: op counts diverged", engine.threads()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn strided_padded_engine_matches_dense_oracle() {
     let engine = ConvEngine::new(3).unwrap();
     forall("engine-geometry-oracle", 0x5EED5, 25, |g| {

@@ -5,7 +5,10 @@
 #
 #   --smoke   additionally run every bench target once with
 #             SUBACCEL_BENCH_SMOKE=1 (clamped to a single short iteration
-#             each — exercises the bench code paths, measures nothing)
+#             each — exercises the bench code paths, measures nothing).
+#             conv_hotpath also writes its machine-readable trajectory to
+#             BENCH_8.json (SUBACCEL_BENCH_JSON); records carry a
+#             "smoke":true flag marking them as shape-only data points.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -43,7 +46,17 @@ if [ "$smoke" = 1 ]; then
     for bench in benches/*.rs; do
         name="$(basename "$bench" .rs)"
         echo "== bench smoke: $name =="
-        SUBACCEL_BENCH_SMOKE=1 cargo bench --bench "$name"
+        if [ "$name" = conv_hotpath ]; then
+            SUBACCEL_BENCH_SMOKE=1 SUBACCEL_BENCH_JSON=BENCH_8.json \
+                cargo bench --bench "$name"
+            if [ ! -s BENCH_8.json ]; then
+                echo "error: conv_hotpath did not emit BENCH_8.json" >&2
+                exit 1
+            fi
+            echo "== bench trajectory: BENCH_8.json ($(wc -c <BENCH_8.json) bytes) =="
+        else
+            SUBACCEL_BENCH_SMOKE=1 cargo bench --bench "$name"
+        fi
     done
 fi
 
