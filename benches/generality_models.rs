@@ -8,15 +8,18 @@
 
 use subaccel::accel::{model_ops, WeightStats};
 use subaccel::hw::{savings_report, CostModel};
-use subaccel::nn::{alexnet, lenet5, vgg_small, Model};
+use subaccel::nn::{alexnet, grouped_mixer, lenet5, vgg_small, Model};
 use subaccel::util::bench_smoke;
 
 fn main() {
     let cost = CostModel::ieee754_f32();
-    let nets: [(Model, &[usize]); 3] = [
+    // grouped_mixer exercises the geometry LeNet/VGG/AlexNet don't:
+    // grouped convs, non-square kernels, asymmetric padding, padded pool
+    let nets: [(Model, &[usize]); 4] = [
         (lenet5(), &[1, 1, 32, 32]),
         (vgg_small(), &[1, 3, 32, 32]),
         (alexnet(), &[1, 3, 227, 227]),
+        (grouped_mixer(), &[1, 8, 20, 16]),
     ];
     for (model, input) in &nets {
         let infos = model.conv_layers(input);

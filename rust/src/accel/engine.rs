@@ -47,19 +47,34 @@ use crate::nn::OpCounts;
 use crate::tensor::{im2col_rows_into, im2col_shape, im2col_slice_into, Tensor};
 
 /// Spatial geometry of a conv layer (everything [`ConvEngine`] needs
-/// beyond the pairing itself).
+/// beyond the pairing itself): kernel extent, stride, independent
+/// row/column zero padding, and channel groups.
+///
+/// With `groups > 1` the input's channels split into `groups` equal
+/// blocks and filter `c` reads only its block — the pairing's `k_len`
+/// stays the *per-filter* flat length `Cin/groups · kh · kw`, while an
+/// im2col patch row carries all `Cin · kh · kw` values; the kernels add
+/// the filter's group base offset when gathering taps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvGeometry {
     pub kh: usize,
     pub kw: usize,
     pub stride: usize,
-    pub pad: usize,
+    pub pad_h: usize,
+    pub pad_w: usize,
+    pub groups: usize,
 }
 
 impl ConvGeometry {
     /// Valid convolution, stride 1 (LeNet geometry).
     pub fn valid(kh: usize, kw: usize) -> Self {
-        Self { kh, kw, stride: 1, pad: 0 }
+        Self::symmetric(kh, kw, 1, 0)
+    }
+
+    /// Ungrouped convolution with symmetric padding (the historical
+    /// `(stride, pad)` geometry every pre-grouped call site used).
+    pub fn symmetric(kh: usize, kw: usize, stride: usize, pad: usize) -> Self {
+        Self { kh, kw, stride, pad_h: pad, pad_w: pad, groups: 1 }
     }
 }
 
@@ -469,10 +484,11 @@ impl ConvEngine {
         out: &mut Vec<f32>,
     ) -> Result<(ConvOutShape, OpCounts), SubaccelError> {
         assert_eq!(bias.len(), packed.cout, "bias length != Cout");
-        let s = im2col_shape(xshape, geo.kh, geo.kw, geo.stride, geo.pad);
-        if s.k != packed.k_len {
+        check_geo(packed, geo)?;
+        let s = im2col_shape(xshape, geo.kh, geo.kw, geo.stride, geo.pad_h, geo.pad_w);
+        if s.k != geo.groups * packed.k_len {
             return Err(SubaccelError::KernelMismatch {
-                expected_k: packed.k_len,
+                expected_k: geo.groups * packed.k_len,
                 got_k: s.k,
             });
         }
@@ -483,7 +499,11 @@ impl ConvEngine {
             .tile_rows
             .unwrap_or_else(|| tile_rows_heuristic(packed.k_len, cout, packed.total_taps()));
 
-        let inner = &mut *self.inner.lock().expect("engine lock");
+        // Poison recovery: the guarded state is pure scratch, resized and
+        // fully overwritten below before any read — a panic mid-forward
+        // on another thread leaves nothing a later call could observe, so
+        // one wedged request must not poison every subsequent one.
+        let inner = &mut *self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let Inner { scratch, pool } = inner;
         scratch.rowmajor.resize(rows * cout, 0.0);
 
@@ -565,6 +585,7 @@ impl ConvEngine {
         x: &Tensor,
     ) -> Result<(Tensor, OpCounts), SubaccelError> {
         assert_eq!(bias.len(), packed.cout, "bias length != Cout");
+        check_geo(packed, geo)?;
         let mut patches = Vec::new();
         let s = im2col_slice_into(
             x.data(),
@@ -572,18 +593,19 @@ impl ConvEngine {
             geo.kh,
             geo.kw,
             geo.stride,
-            geo.pad,
+            geo.pad_h,
+            geo.pad_w,
             &mut patches,
         );
-        if s.k != packed.k_len {
+        if s.k != geo.groups * packed.k_len {
             return Err(SubaccelError::KernelMismatch {
-                expected_k: packed.k_len,
+                expected_k: geo.groups * packed.k_len,
                 got_k: s.k,
             });
         }
         let (rows, cout) = (s.rows, packed.cout);
         let mut rowmajor = vec![0.0; rows * cout];
-        compute_rows(&patches, s.k, packed, bias.data(), &mut rowmajor);
+        compute_rows(&patches, s.k, geo.groups, packed, bias.data(), &mut rowmajor);
         let mut out = vec![0.0; rows * cout];
         rowmajor_to_nchw(&rowmajor, s.batch, cout, s.out_h, s.out_w, &mut out);
         let counts = OpCounts::paired_layer(
@@ -594,6 +616,35 @@ impl ConvEngine {
         );
         Ok((Tensor::new(&[s.batch, cout, s.out_h, s.out_w], out), counts))
     }
+}
+
+/// Geometry/pairing agreement checks shared by both engine entry points
+/// (run before im2col, whose shape function asserts on `stride == 0`).
+/// The patch-length check (`Cin·kh·kw == groups · k_len`) happens after
+/// the input shape is known.
+fn check_geo(packed: &PackedPairing, geo: ConvGeometry) -> Result<(), SubaccelError> {
+    if geo.stride == 0 {
+        return Err(SubaccelError::InvalidConfig {
+            field: "stride",
+            reason: "conv stride must be at least 1".into(),
+        });
+    }
+    if geo.groups == 0 {
+        return Err(SubaccelError::InvalidConfig {
+            field: "groups",
+            reason: "conv groups must be at least 1".into(),
+        });
+    }
+    if packed.cout % geo.groups != 0 {
+        return Err(SubaccelError::InvalidConfig {
+            field: "groups",
+            reason: format!(
+                "{} output channels not divisible into {} groups",
+                packed.cout, geo.groups
+            ),
+        });
+    }
+    Ok(())
 }
 
 /// Transpose the engine's `(rows, Cout)` row-major intermediate into the
@@ -613,10 +664,9 @@ fn rowmajor_to_nchw(rowmajor: &[f32], b: usize, cout: usize, oh: usize, ow: usiz
 
 impl Drop for ConvEngine {
     fn drop(&mut self) {
-        // Dropping the senders ends each worker's recv loop.
-        if let Ok(mut g) = self.inner.lock() {
-            g.pool = None;
-        }
+        // Dropping the senders ends each worker's recv loop; recover from
+        // poison so a panicked forward doesn't leak the worker threads.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).pool = None;
         for h in std::mem::take(&mut self.handles) {
             let _ = h.join();
         }
@@ -674,13 +724,33 @@ fn compute_shard(
     strip: &mut Vec<f32>,
     out: &mut [f32],
 ) {
-    let (k, cout) = (packed.k_len, packed.cout);
+    // A strip row carries the full patch (`Cin·kh·kw` floats); with
+    // groups each filter reads only its `k_len`-float block of it.
+    let (k, cout) = (geo.groups * packed.k_len, packed.cout);
     let rows = out.len() / cout;
     let mut r = 0;
     while r < rows {
         let t = tile.min(rows - r);
-        im2col_rows_into(xd, shape, geo.kh, geo.kw, geo.stride, geo.pad, row0 + r, t, strip);
-        compute_rows_tiled(&strip[..t * k], k, packed, bias, &mut out[r * cout..(r + t) * cout]);
+        im2col_rows_into(
+            xd,
+            shape,
+            geo.kh,
+            geo.kw,
+            geo.stride,
+            geo.pad_h,
+            geo.pad_w,
+            row0 + r,
+            t,
+            strip,
+        );
+        compute_rows_tiled(
+            &strip[..t * k],
+            k,
+            geo.groups,
+            packed,
+            bias,
+            &mut out[r * cout..(r + t) * cout],
+        );
         r += t;
     }
 }
@@ -691,12 +761,27 @@ fn compute_shard(
 /// order — [`compute_rows_tiled`] reproduces exactly this per-element
 /// reduction, so the two kernels are bit-identical. The zip/sum shapes
 /// mirror the original `SubConv2d` hot loop, preserving its numerics.
-fn compute_rows(patches: &[f32], k: usize, packed: &PackedPairing, bias: &[f32], out: &mut [f32]) {
+///
+/// `k` is the full patch-row length `Cin·kh·kw` = `groups · k_len`;
+/// filter `c` gathers from its group's `k_len`-float block of the patch
+/// (a pure base-offset shift, so grouping never perturbs the per-element
+/// reduction order).
+fn compute_rows(
+    patches: &[f32],
+    k: usize,
+    groups: usize,
+    packed: &PackedPairing,
+    bias: &[f32],
+    out: &mut [f32],
+) {
     let cout = packed.cout;
+    let cpg = cout / groups;
     let rows = out.len() / cout;
     for r in 0..rows {
-        let patch = &patches[r * k..(r + 1) * k];
+        let full = &patches[r * k..(r + 1) * k];
         for c in 0..cout {
+            let base = (c / cpg) * packed.k_len;
+            let patch = &full[base..base + packed.k_len];
             // subtractor lane: k·(I1 − I2) per combined pair
             let (i1, i2, kk) = packed.pairs(c);
             let pair_acc: f32 = i1
@@ -729,26 +814,31 @@ fn compute_rows(patches: &[f32], k: usize, packed: &PackedPairing, bias: &[f32],
 ///
 /// Safety of the unchecked gathers: every index in the tap tables is
 /// `< k_len` (asserted once in [`PackedPairing::from_layer`]) and every
-/// `patch` row here is exactly `k == k_len` long (the engine rejects
+/// `patch` view here is the filter's group block, exactly `k_len` floats
+/// of a `k == groups · k_len`-float strip row (the engine rejects
 /// mismatched inputs with [`SubaccelError::KernelMismatch`] before
-/// dispatch); `debug_assert!` restates the proof in debug builds.
+/// dispatch, so the safe block slice below never truncates);
+/// `debug_assert!` restates the proof in debug builds.
 fn compute_rows_tiled(
     patches: &[f32],
     k: usize,
+    groups: usize,
     packed: &PackedPairing,
     bias: &[f32],
     out: &mut [f32],
 ) {
     let cout = packed.cout;
+    let cpg = cout / groups;
     let rows = out.len() / cout;
-    debug_assert_eq!(k, packed.k_len);
+    debug_assert_eq!(k, groups * packed.k_len);
     debug_assert!(patches.len() >= rows * k);
     for c in 0..cout {
         let (i1, i2, kk) = packed.pairs(c);
         let (ui, uw) = packed.unpaired(c);
         let bc = bias[c];
+        let base = (c / cpg) * packed.k_len;
         for r in 0..rows {
-            let patch = &patches[r * k..(r + 1) * k];
+            let patch = &patches[r * k + base..r * k + base + packed.k_len];
             // subtractor lane: k·(I1 − I2) per combined pair
             let pair_acc: f32 = i1
                 .iter()
@@ -794,10 +884,38 @@ pub fn tile_rows_heuristic(k_len: usize, cout: usize, total_taps: usize) -> usiz
     by_l1.min(by_reuse)
 }
 
+/// Parse a `SUBACCEL_TILE_ROWS` value: `Ok(Some(n))` for a positive
+/// integer, `Ok(None)` for empty/whitespace (treated as unset), and
+/// `Err(reason)` for anything else — zero included, since a zero tile
+/// can never be honoured and silently falling back to the heuristic
+/// would hide the typo. Split out from [`env_tile_rows`] so both paths
+/// are unit-testable without touching process environment.
+fn parse_tile_rows(raw: &str) -> Result<Option<usize>, String> {
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Ok(None);
+    }
+    match trimmed.parse::<usize>() {
+        Ok(0) => Err(format!("SUBACCEL_TILE_ROWS={raw:?}: row tile must be at least 1")),
+        Ok(n) => Ok(Some(n)),
+        Err(e) => Err(format!("SUBACCEL_TILE_ROWS={raw:?}: not a positive integer ({e})")),
+    }
+}
+
 /// `SUBACCEL_TILE_ROWS` override, read once at engine construction.
-/// Unset, empty, unparsable, or zero values mean "use the heuristic".
+/// Unset or empty means "use the heuristic"; a malformed or zero value
+/// also falls back, but *loudly* — a warning on stderr instead of the
+/// silent swallow that used to make a typo'd override indistinguishable
+/// from no override.
 fn env_tile_rows() -> Option<usize> {
-    std::env::var("SUBACCEL_TILE_ROWS").ok()?.trim().parse().ok().filter(|&n| n > 0)
+    let raw = std::env::var("SUBACCEL_TILE_ROWS").ok()?;
+    match parse_tile_rows(&raw) {
+        Ok(tile) => tile,
+        Err(reason) => {
+            eprintln!("warning: ignoring tile override, falling back to heuristic: {reason}");
+            None
+        }
+    }
 }
 
 #[cfg(test)]
@@ -867,7 +985,7 @@ mod tests {
         let b = rand_t(&mut rng, &[4]);
         let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.05));
         let eng = ConvEngine::new(3).unwrap();
-        let geo = ConvGeometry { kh: 5, kw: 5, stride: 2, pad: 2 };
+        let geo = ConvGeometry::symmetric(5, 5, 2, 2);
         let (y, _) = eng.forward_packed(&p, &b, geo, &x).unwrap();
         assert_eq!(y.shape(), &[1, 4, 8, 8]);
         // matches the serial engine bit-for-bit on the same geometry
@@ -903,7 +1021,7 @@ mod tests {
         let w = rand_t(&mut rng, &[5, 3, 3, 3]);
         let b = rand_t(&mut rng, &[5]);
         let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.05));
-        let geo = ConvGeometry { kh: 3, kw: 3, stride: 1, pad: 1 };
+        let geo = ConvGeometry::symmetric(3, 3, 1, 1);
         let (want, want_counts) = ConvEngine::forward_packed_reference(&p, &b, geo, &x).unwrap();
         // rows = 2·12·12 = 288, so 1000 exercises the tile > rows case
         for tile in [1usize, 2, 7, 64, 1000] {
@@ -990,5 +1108,136 @@ mod tests {
         assert_eq!(buf.len(), os.dims().iter().product::<usize>());
         let (fresh, _) = eng.forward_packed(&p, &b, geo, &small).unwrap();
         assert_eq!(&buf[..], fresh.data());
+    }
+
+    #[test]
+    fn grouped_conv_equals_per_group_ungrouped_convs() {
+        // groups=2: filters 0..2 read channels 0..2, filters 2..4 read
+        // channels 2..4. Running each group as an independent ungrouped
+        // conv must reproduce the grouped forward bit-for-bit (the group
+        // base offset only shifts where taps gather from, never the
+        // per-element reduction order).
+        let mut rng = Rng::seed_from_u64(61);
+        let w = rand_t(&mut rng, &[4, 2, 3, 3]);
+        let b = rand_t(&mut rng, &[4]);
+        let x = rand_t(&mut rng, &[1, 4, 8, 8]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.1));
+        let geo = ConvGeometry { kh: 3, kw: 3, stride: 1, pad_h: 1, pad_w: 1, groups: 2 };
+        for threads in [1usize, 3] {
+            let eng = ConvEngine::new(threads).unwrap();
+            let (got, _) = eng.forward_packed(&p, &b, geo, &x).unwrap();
+            assert_eq!(got.shape(), &[1, 4, 8, 8]);
+            let ungrouped = ConvGeometry::symmetric(3, 3, 1, 1);
+            let mut want = Vec::new();
+            for g in 0..2usize {
+                let wg = Tensor::new(&[2, 2, 3, 3], w.data()[g * 36..(g + 1) * 36].to_vec());
+                let bg = Tensor::new(&[2], b.data()[g * 2..(g + 1) * 2].to_vec());
+                let xg = Tensor::new(&[1, 2, 8, 8], x.data()[g * 128..(g + 1) * 128].to_vec());
+                let pg = PackedPairing::from_layer(&LayerPairing::from_weights(&wg, 0.1));
+                let (yg, _) = eng.forward_packed(&pg, &bg, ungrouped, &xg).unwrap();
+                want.extend_from_slice(yg.data());
+            }
+            assert_eq!(got.data(), &want[..], "t={threads}: grouped path diverged");
+        }
+    }
+
+    #[test]
+    fn grouped_nonsquare_asym_tiled_matches_reference() {
+        // the full generalized geometry at once — groups, kh≠kw,
+        // pad_h≠pad_w, stride 2 — bit-identical across tile sizes and
+        // thread counts to the untiled reference kernel
+        let mut rng = Rng::seed_from_u64(67);
+        let w = rand_t(&mut rng, &[6, 2, 3, 5]);
+        let b = rand_t(&mut rng, &[6]);
+        let x = rand_t(&mut rng, &[2, 6, 9, 11]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.08));
+        let geo = ConvGeometry { kh: 3, kw: 5, stride: 2, pad_h: 1, pad_w: 2, groups: 3 };
+        let (want, want_counts) = ConvEngine::forward_packed_reference(&p, &b, geo, &x).unwrap();
+        // oh = (9 + 2·1 − 3)/2 + 1 = 5, ow = (11 + 2·2 − 5)/2 + 1 = 6
+        assert_eq!(want.shape(), &[2, 6, 5, 6]);
+        for tile in [1usize, 4, 1000] {
+            for threads in [1usize, 3] {
+                let eng = ConvEngine::with_tile_rows(threads, tile).unwrap();
+                let (got, counts) = eng.forward_packed(&p, &b, geo, &x).unwrap();
+                assert_eq!(got.data(), want.data(), "tile {tile} t={threads} diverged");
+                assert_eq!(counts, want_counts);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_grouped_geometry_is_typed() {
+        let mut rng = Rng::seed_from_u64(71);
+        let w = rand_t(&mut rng, &[4, 2, 3, 3]);
+        let b = Tensor::zeros(&[4]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.0));
+        let eng = ConvEngine::serial();
+        let x = rand_t(&mut rng, &[1, 4, 8, 8]);
+        // 4 filters don't split into 3 groups
+        let geo = ConvGeometry { kh: 3, kw: 3, stride: 1, pad_h: 0, pad_w: 0, groups: 3 };
+        match eng.forward_packed(&p, &b, geo, &x) {
+            Err(SubaccelError::InvalidConfig { field: "groups", .. }) => {}
+            other => panic!("expected InvalidConfig(groups), got {other:?}"),
+        }
+        // zero groups and zero stride are config errors, not panics
+        let geo = ConvGeometry { groups: 0, ..ConvGeometry::valid(3, 3) };
+        assert!(matches!(
+            eng.forward_packed(&p, &b, geo, &x),
+            Err(SubaccelError::InvalidConfig { field: "groups", .. })
+        ));
+        let geo = ConvGeometry { stride: 0, ..ConvGeometry::valid(3, 3) };
+        assert!(matches!(
+            eng.forward_packed(&p, &b, geo, &x),
+            Err(SubaccelError::InvalidConfig { field: "stride", .. })
+        ));
+        // channel count that doesn't give groups·k_len per patch → typed
+        // mismatch reporting the grouped expectation
+        let geo = ConvGeometry { kh: 3, kw: 3, stride: 1, pad_h: 0, pad_w: 0, groups: 2 };
+        let bad = rand_t(&mut rng, &[1, 6, 8, 8]);
+        assert_eq!(
+            eng.forward_packed(&p, &b, geo, &bad).unwrap_err(),
+            SubaccelError::KernelMismatch { expected_k: 2 * 18, got_k: 6 * 9 }
+        );
+    }
+
+    #[test]
+    fn tile_rows_env_values_parse_or_warn() {
+        // valid overrides parse (whitespace tolerated)
+        assert_eq!(parse_tile_rows("8"), Ok(Some(8)));
+        assert_eq!(parse_tile_rows(" 16 "), Ok(Some(16)));
+        // empty/whitespace is "unset", not an error
+        assert_eq!(parse_tile_rows(""), Ok(None));
+        assert_eq!(parse_tile_rows("   "), Ok(None));
+        // zero and garbage are *reported*, never silently swallowed
+        for bad in ["0", "abc", "-3", "1.5"] {
+            let err = parse_tile_rows(bad).unwrap_err();
+            assert!(err.contains("SUBACCEL_TILE_ROWS"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn poisoned_engine_lock_still_serves() {
+        let mut rng = Rng::seed_from_u64(83);
+        let w = rand_t(&mut rng, &[3, 2, 3, 3]);
+        let b = rand_t(&mut rng, &[3]);
+        let x = rand_t(&mut rng, &[1, 2, 9, 9]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.1));
+        let geo = ConvGeometry::valid(3, 3);
+        let eng = ConvEngine::new(2).unwrap();
+        let (want, _) = eng.forward_packed(&p, &b, geo, &x).unwrap();
+        // poison the scratch lock: a thread panics while holding it
+        let panicked = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = eng.inner.lock().unwrap();
+                panic!("poisoning the engine lock on purpose");
+            })
+            .join()
+        });
+        assert!(panicked.is_err());
+        assert!(eng.inner.is_poisoned());
+        // scratch is re-derivable, so the engine recovers and still
+        // computes the exact same result
+        let (got, _) = eng.forward_packed(&p, &b, geo, &x).unwrap();
+        assert_eq!(got.data(), want.data());
     }
 }

@@ -86,6 +86,26 @@ mod tests {
     }
 
     #[test]
+    fn grouped_nonsquare_geometry_counts() {
+        use crate::nn::grouped_mixer;
+        // Grouped weights are simply shorter flat filters, so the paired
+        // accounting identities carry over unchanged: gconv1 is
+        // 16·(8/2)·3·5 = 960 weights over 20·16 positions, gconv2
+        // 32·(16/4)·5·3 = 1920 over 5·4.
+        let base = 960u64 * 320 + 1920 * 20;
+        for r in [0.0f32, 0.1, 0.3] {
+            let row = model_ops(&grouped_mixer(), &[1, 8, 20, 16], r);
+            assert_eq!(row.adds, row.muls, "rounding {r}");
+            assert_eq!(row.adds + row.subs, base, "rounding {r}");
+            assert_eq!(row.total, 2 * base - row.subs, "rounding {r}");
+        }
+        let row = model_ops(&grouped_mixer(), &[1, 8, 20, 16], 0.1);
+        assert_eq!(row.layers.len(), 2);
+        assert_eq!(row.layers[0].2, 960);
+        assert_eq!(row.layers[1].2, 1920);
+    }
+
+    #[test]
     fn per_layer_detail_sums() {
         let row = model_ops(&lenet5(), &[1, 1, 32, 32], 0.1);
         assert_eq!(row.layers.len(), 3);

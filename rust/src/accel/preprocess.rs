@@ -116,11 +116,14 @@ pub fn pair_filter(w: &[f32], rounding: f32) -> FilterPairing {
     res
 }
 
-/// Pairing of a whole conv layer `(Cout, Cin, kh, kw)`.
+/// Pairing of a whole conv layer `(Cout, Cin/groups, kh, kw)` — grouped
+/// weights work unchanged, since Algorithm 1 runs per filter and a
+/// grouped filter is just a shorter flat weight vector.
 #[derive(Debug, Clone)]
 pub struct LayerPairing {
     pub filters: Vec<FilterPairing>,
-    /// Flat weights-per-filter (Cin·kh·kw).
+    /// Flat weights-per-filter (`Cin/groups · kh · kw`; the engine calls
+    /// this the per-group patch length).
     pub k_len: usize,
     /// Weight tensor shape this pairing was derived from.
     pub shape: Vec<usize>,

@@ -46,8 +46,10 @@ impl SubConv2d {
         Self::compile_geo(weight, bias, rounding, 1, 0)
     }
 
-    /// [`SubConv2d::compile`] with explicit stride / zero padding
-    /// (AlexNet-style geometries).
+    /// [`SubConv2d::compile`] with explicit stride / symmetric zero
+    /// padding (AlexNet-style geometries). Panics on malformed inputs
+    /// (historical API); grouped or asymmetric layers go through the
+    /// typed [`SubConv2d::compile_with`].
     pub fn compile_geo(
         weight: &Tensor,
         bias: &Tensor,
@@ -55,14 +57,60 @@ impl SubConv2d {
         stride: usize,
         pad: usize,
     ) -> Self {
-        assert_eq!(weight.ndim(), 4, "conv weight must be OIHW");
+        let (kh, kw) = (weight.shape()[2], weight.shape()[3]);
+        Self::compile_with(weight, bias, rounding, ConvGeometry::symmetric(kh, kw, stride, pad))
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Compile against a full [`ConvGeometry`] — groups, non-square
+    /// kernels, asymmetric padding — with every malformed combination
+    /// reported as a typed [`SubaccelError::InvalidConfig`] instead of a
+    /// panic. For grouped layers the weight is the standard grouped OIHW
+    /// `(Cout, Cin/groups, kh, kw)`.
+    pub fn compile_with(
+        weight: &Tensor,
+        bias: &Tensor,
+        rounding: f32,
+        geo: ConvGeometry,
+    ) -> Result<Self, SubaccelError> {
+        let bad = |field: &'static str, reason: String| SubaccelError::InvalidConfig {
+            field,
+            reason,
+        };
+        if weight.ndim() != 4 {
+            return Err(bad("weight", format!("conv weight must be OIHW, got {:?}", weight.shape())));
+        }
         let cout = weight.shape()[0];
-        assert_eq!(bias.len(), cout, "bias length");
+        if bias.len() != cout {
+            return Err(bad("bias", format!("bias length {} != Cout {cout}", bias.len())));
+        }
+        if geo.kh != weight.shape()[2] || geo.kw != weight.shape()[3] {
+            return Err(bad(
+                "kernel",
+                format!(
+                    "geometry kernel {}x{} != weight kernel {}x{}",
+                    geo.kh,
+                    geo.kw,
+                    weight.shape()[2],
+                    weight.shape()[3]
+                ),
+            ));
+        }
+        if geo.stride == 0 {
+            return Err(bad("stride", "conv stride must be at least 1".into()));
+        }
+        if geo.groups == 0 {
+            return Err(bad("groups", "conv groups must be at least 1".into()));
+        }
+        if cout % geo.groups != 0 {
+            return Err(bad(
+                "groups",
+                format!("{cout} output channels not divisible into {} groups", geo.groups),
+            ));
+        }
         let pairing = LayerPairing::from_weights(weight, rounding);
         let packed = PackedPairing::from_layer(&pairing);
-        let geo =
-            ConvGeometry { kh: weight.shape()[2], kw: weight.shape()[3], stride, pad };
-        Self { pairing, packed, bias: bias.clone(), geo }
+        Ok(Self { pairing, packed, bias: bias.clone(), geo })
     }
 
     /// Wrap an existing pairing (e.g. deserialized from disk).

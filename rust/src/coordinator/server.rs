@@ -464,7 +464,11 @@ fn worker_loop(
         // pull one batch from the shared queue (short timeout so control
         // messages stay responsive)
         let msg = {
-            let guard = shared.lock().expect("work queue poisoned");
+            // The mutex only guards a Receiver handle — nothing about it
+            // is invalidated by another worker panicking mid-recv, so a
+            // poisoned lock is recovered rather than cascading the panic
+            // into every surviving replica.
+            let guard = shared.lock().unwrap_or_else(|e| e.into_inner());
             guard.recv_timeout(Duration::from_millis(5))
         };
         let WorkBatch { images, replies } = match msg {

@@ -33,7 +33,7 @@ pub use plan::{ExecutionPlan, PlanExecutor, PlanStep};
 
 use std::sync::Arc;
 
-use crate::accel::SubConv2d;
+use crate::accel::{ConvGeometry, SubConv2d};
 use crate::error::SubaccelError;
 use crate::nn::layers::{Activation, LayerKind};
 use crate::nn::Model;
@@ -57,7 +57,7 @@ enum CompiledLayer {
     /// Conv on the paired subtractor datapath.
     Conv { name: String, unit: Arc<SubConv2d>, act: Activation },
     AvgPool { name: String, k: usize, act: Activation },
-    MaxPool { name: String, k: usize, stride: usize, act: Activation },
+    MaxPool { name: String, k: usize, stride: usize, pad: usize, act: Activation },
     Flatten { name: String, act: Activation },
     Dense { name: String, weight: Arc<Tensor>, bias: Arc<Tensor>, act: Activation },
 }
@@ -65,35 +65,51 @@ enum CompiledLayer {
 impl CompiledNet {
     /// Run Algorithm 1 over every conv layer of `model` at the given
     /// rounding size. This is the expensive step (sorting weights);
-    /// everything downstream reuses its output.
+    /// everything downstream reuses its output. Panics on malformed conv
+    /// layers (historical API); [`CompiledNet::try_compile`] is the typed
+    /// form the serving paths use.
     pub fn compile(model: &Model, rounding: f32) -> Self {
-        let layers = model
-            .layers
-            .iter()
-            .map(|layer| {
-                let name = layer.name.clone();
-                match &layer.kind {
-                    LayerKind::Conv2d { weight, bias, stride, pad } => {
-                        let unit = SubConv2d::compile_geo(weight, bias, rounding, *stride, *pad);
-                        CompiledLayer::Conv { name, unit: Arc::new(unit), act: layer.act }
-                    }
-                    LayerKind::AvgPool { k } => {
-                        CompiledLayer::AvgPool { name, k: *k, act: layer.act }
-                    }
-                    LayerKind::MaxPool { k, stride } => {
-                        CompiledLayer::MaxPool { name, k: *k, stride: *stride, act: layer.act }
-                    }
-                    LayerKind::Flatten => CompiledLayer::Flatten { name, act: layer.act },
-                    LayerKind::Dense { weight, bias } => CompiledLayer::Dense {
-                        name,
-                        weight: Arc::new(weight.clone()),
-                        bias: Arc::new(bias.clone()),
-                        act: layer.act,
-                    },
+        Self::try_compile(model, rounding).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`CompiledNet::compile`] with malformed conv layers (group/kernel
+    /// disagreements, zero stride, …) reported as typed
+    /// [`SubaccelError`]s instead of panics.
+    pub fn try_compile(model: &Model, rounding: f32) -> Result<Self, SubaccelError> {
+        let mut layers = Vec::with_capacity(model.layers.len());
+        for layer in &model.layers {
+            let name = layer.name.clone();
+            layers.push(match &layer.kind {
+                LayerKind::Conv2d { weight, bias, stride, pad_h, pad_w, groups } => {
+                    let geo = ConvGeometry {
+                        kh: weight.shape()[2],
+                        kw: weight.shape()[3],
+                        stride: *stride,
+                        pad_h: *pad_h,
+                        pad_w: *pad_w,
+                        groups: *groups,
+                    };
+                    let unit = SubConv2d::compile_with(weight, bias, rounding, geo)?;
+                    CompiledLayer::Conv { name, unit: Arc::new(unit), act: layer.act }
                 }
-            })
-            .collect();
-        Self { name: model.name.clone(), rounding, layers }
+                LayerKind::AvgPool { k } => CompiledLayer::AvgPool { name, k: *k, act: layer.act },
+                LayerKind::MaxPool { k, stride, pad } => CompiledLayer::MaxPool {
+                    name,
+                    k: *k,
+                    stride: *stride,
+                    pad: *pad,
+                    act: layer.act,
+                },
+                LayerKind::Flatten => CompiledLayer::Flatten { name, act: layer.act },
+                LayerKind::Dense { weight, bias } => CompiledLayer::Dense {
+                    name,
+                    weight: Arc::new(weight.clone()),
+                    bias: Arc::new(bias.clone()),
+                    act: layer.act,
+                },
+            });
+        }
+        Ok(Self { name: model.name.clone(), rounding, layers })
     }
 
     pub fn name(&self) -> &str {

@@ -65,7 +65,7 @@ impl PlanStep {
 enum StepOp {
     PairedConv { unit: Arc<SubConv2d>, act: Activation },
     AvgPool { k: usize, act: Activation },
-    MaxPool { k: usize, stride: usize, act: Activation },
+    MaxPool { k: usize, stride: usize, pad: usize, act: Activation },
     /// Pure NCHW → (N, C·H·W) relabel: row-major layout is unchanged, so
     /// the executor moves no data for this step.
     Reshape { act: Activation },
@@ -93,10 +93,16 @@ impl ExecutionPlan {
     /// single call. Prefer compiling a [`CompiledNet`] once and planning
     /// it per shape when serving multiple batch sizes.
     pub fn compile(model: &Model, rounding: f32, input: &[usize]) -> Result<Self, SubaccelError> {
-        CompiledNet::compile(model, rounding).plan(input)
+        CompiledNet::try_compile(model, rounding)?.plan(input)
     }
 
     pub(super) fn from_net(net: &CompiledNet, input: &[usize]) -> Result<Self, SubaccelError> {
+        if input.is_empty() {
+            return Err(bad_input("empty input shape".to_string()));
+        }
+        if let Some(d) = input.iter().position(|&n| n == 0) {
+            return Err(bad_input(format!("input shape {input:?} has zero dim at axis {d}")));
+        }
         let mut shape = input.to_vec();
         let mut max_elems: usize = shape.iter().product();
         let mut steps = Vec::with_capacity(net.layers.len());
@@ -107,14 +113,21 @@ impl ExecutionPlan {
                     let [b, c, h, w] = dims4(&in_shape, name)?;
                     let geo = unit.geometry();
                     let packed = unit.packed();
-                    let (hp, wp) = (h + 2 * geo.pad, w + 2 * geo.pad);
+                    let (hp, wp) = (h + 2 * geo.pad_h, w + 2 * geo.pad_w);
                     if hp < geo.kh || wp < geo.kw {
                         return Err(bad_input(format!(
                             "layer {name}: kernel {}x{} larger than padded input {h}x{w}",
                             geo.kh, geo.kw
                         )));
                     }
-                    let k = c * geo.kh * geo.kw;
+                    if c % geo.groups != 0 {
+                        return Err(bad_input(format!(
+                            "layer {name}: {c} input channels not divisible into {} groups",
+                            geo.groups
+                        )));
+                    }
+                    // per-group patch length must match the packed tables
+                    let k = (c / geo.groups) * geo.kh * geo.kw;
                     if k != packed.k_len() {
                         return Err(SubaccelError::KernelMismatch {
                             expected_k: packed.k_len(),
@@ -151,17 +164,36 @@ impl ExecutionPlan {
                     counts.activations += act_elems(*act, out);
                     (name, vec![b, c, oh, ow], counts, StepOp::AvgPool { k, act: *act })
                 }
-                CompiledLayer::MaxPool { name, k, stride, act } => {
+                CompiledLayer::MaxPool { name, k, stride, pad, act } => {
                     let [b, c, h, w] = dims4(&in_shape, name)?;
-                    let (k, stride) = (*k, *stride);
-                    if h < k || w < k {
-                        return Err(bad_input(format!("layer {name}: maxpool {k} on {h}x{w}")));
+                    let (k, stride, pad) = (*k, *stride, *pad);
+                    if k == 0 || stride == 0 {
+                        return Err(SubaccelError::InvalidConfig {
+                            field: "maxpool",
+                            reason: format!(
+                                "layer {name}: kernel {k} / stride {stride} must be at least 1"
+                            ),
+                        });
                     }
-                    let oh = (h - k) / stride + 1;
-                    let ow = (w - k) / stride + 1;
+                    if pad >= k {
+                        return Err(SubaccelError::InvalidConfig {
+                            field: "maxpool",
+                            reason: format!(
+                                "layer {name}: pad {pad} must be smaller than kernel {k}"
+                            ),
+                        });
+                    }
+                    if h + 2 * pad < k || w + 2 * pad < k {
+                        return Err(bad_input(format!(
+                            "layer {name}: maxpool kernel {k} larger than padded input \
+                             {h}x{w} (pad {pad})"
+                        )));
+                    }
+                    let oh = (h + 2 * pad - k) / stride + 1;
+                    let ow = (w + 2 * pad - k) / stride + 1;
                     let mut counts = OpCounts::default();
                     counts.activations += act_elems(*act, b * c * oh * ow);
-                    let op = StepOp::MaxPool { k, stride, act: *act };
+                    let op = StepOp::MaxPool { k, stride, pad, act: *act };
                     (name, vec![b, c, oh, ow], counts, op)
                 }
                 CompiledLayer::Flatten { name, act } => {
@@ -239,9 +271,11 @@ impl ExecutionPlan {
         &self.output_shape
     }
 
-    /// Batch size the plan was resolved for.
+    /// Batch size the plan was resolved for. `from_net` rejects empty
+    /// and zero-dim input shapes with a typed error, so a constructed
+    /// plan always has a real leading batch dimension.
     pub fn batch(&self) -> usize {
-        self.input_shape.first().copied().unwrap_or(0)
+        self.input_shape[0]
     }
 
     pub fn steps(&self) -> &[PlanStep] {
@@ -400,8 +434,8 @@ impl PlanExecutor {
                     act.apply_slice(&mut self.spare);
                     std::mem::swap(&mut self.cur, &mut self.spare);
                 }
-                StepOp::MaxPool { k, stride, act } => {
-                    maxpool_into(&self.cur, &step.in_shape, *k, *stride, &mut self.spare);
+                StepOp::MaxPool { k, stride, pad, act } => {
+                    maxpool_into(&self.cur, &step.in_shape, *k, *stride, *pad, &mut self.spare);
                     act.apply_slice(&mut self.spare);
                     std::mem::swap(&mut self.cur, &mut self.spare);
                 }
@@ -519,6 +553,83 @@ mod tests {
             Err(SubaccelError::InvalidConfig { field: "input_shape", .. }) => {}
             other => panic!("expected InvalidConfig, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn zero_dim_and_empty_inputs_are_typed_plan_errors() {
+        let net = CompiledNet::compile(&lenet5(), 0.1);
+        for bad in [&[][..], &[0, 1, 32, 32][..], &[1, 1, 0, 32][..], &[2, 1, 32, 0][..]] {
+            match net.plan(bad) {
+                Err(SubaccelError::InvalidConfig { field: "input_shape", .. }) => {}
+                other => panic!("plan({bad:?}): expected InvalidConfig, got {other:?}"),
+            }
+        }
+        // a valid plan's batch() is the real leading dim
+        assert_eq!(net.plan(&[3, 1, 32, 32]).unwrap().batch(), 3);
+    }
+
+    #[test]
+    fn maxpool_kernel_larger_than_input_is_typed_error() {
+        use crate::nn::layers::{Layer, LayerKind};
+        let pool = |k: usize, stride: usize, pad: usize| {
+            Model::new(
+                "pool-only",
+                vec![Layer::new(
+                    "p",
+                    LayerKind::MaxPool { k, stride, pad },
+                    Activation::None,
+                )],
+            )
+        };
+        // k > padded input → InvalidConfig instead of the historical
+        // (h - k) underflow panic
+        match ExecutionPlan::compile(&pool(5, 2, 0), 0.0, &[1, 1, 4, 4]) {
+            Err(SubaccelError::InvalidConfig { field: "input_shape", .. }) => {}
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        // pad ≥ k is rejected (window could float entirely in padding)
+        match ExecutionPlan::compile(&pool(2, 1, 2), 0.0, &[1, 1, 4, 4]) {
+            Err(SubaccelError::InvalidConfig { field: "maxpool", .. }) => {}
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        match ExecutionPlan::compile(&pool(2, 0, 0), 0.0, &[1, 1, 4, 4]) {
+            Err(SubaccelError::InvalidConfig { field: "maxpool", .. }) => {}
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        // pad makes an otherwise-too-small input legal: 4+2·1 ≥ 5
+        let plan = ExecutionPlan::compile(&pool(5, 2, 1), 0.0, &[1, 1, 4, 4]).unwrap();
+        assert_eq!(plan.output_shape(), &[1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn grouped_mixer_plans_and_runs_through_the_engine() {
+        use crate::nn::grouped_mixer;
+        let m = grouped_mixer();
+        let plan = ExecutionPlan::compile(&m, 0.1, &[2, 8, 20, 16]).unwrap();
+        assert_eq!(plan.output_shape(), &[2, 10]);
+        let shapes: Vec<&[usize]> = plan.steps().iter().map(|s| s.out_shape()).collect();
+        assert_eq!(shapes[0], &[2, 16, 20, 16]);
+        assert_eq!(shapes[1], &[2, 16, 10, 8]);
+        assert_eq!(shapes[2], &[2, 32, 5, 4]);
+        // engine path == dense model with snapped weights (tolerance:
+        // different summation order), and thread/tile invariant (exact)
+        let mut rng = Rng::seed_from_u64(29);
+        let x = randt(&mut rng, &[2, 8, 20, 16]);
+        let mut exec = plan.clone().into_executor();
+        let y1 = exec.infer(&ConvEngine::serial(), &x).unwrap();
+        for (threads, tile) in [(2, 1), (3, 7), (2, 4096)] {
+            let eng = ConvEngine::with_tile_rows(threads, tile).unwrap();
+            let got = exec.infer(&eng, &x).unwrap();
+            assert_eq!(got, y1, "threads {threads} tile {tile} diverged");
+        }
+        let mut snapped = m.clone();
+        for info in m.conv_layers(&[2, 8, 20, 16]) {
+            let lp = crate::accel::LayerPairing::from_weights(&info.weight, 0.1);
+            snapped.set_conv_weights(&info.name, lp.modified_weights(&info.weight));
+        }
+        let (want, _) = snapped.forward(&x);
+        assert_eq!(y1.shape(), want.shape());
+        assert!(y1.max_abs_diff(&want) < 1e-4, "{}", y1.max_abs_diff(&want));
     }
 
     #[test]

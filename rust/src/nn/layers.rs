@@ -52,12 +52,22 @@ impl Activation {
 /// The structural part of a layer (weights live inside the variants).
 #[derive(Debug, Clone)]
 pub enum LayerKind {
-    /// `weight (Cout, Cin, kh, kw)`, `bias (Cout,)`, stride, zero padding.
-    Conv2d { weight: Tensor, bias: Tensor, stride: usize, pad: usize },
+    /// `weight (Cout, Cin/groups, kh, kw)`, `bias (Cout,)`, stride, per-axis
+    /// zero padding, channel groups (1 = ordinary dense connectivity).
+    Conv2d {
+        weight: Tensor,
+        bias: Tensor,
+        stride: usize,
+        pad_h: usize,
+        pad_w: usize,
+        groups: usize,
+    },
     /// k×k average pooling with stride k.
     AvgPool { k: usize },
-    /// k×k max pooling with the given stride (AlexNet uses overlapping 3/2).
-    MaxPool { k: usize, stride: usize },
+    /// k×k max pooling with the given stride and symmetric zero padding
+    /// (AlexNet uses overlapping 3/2; padded windows skip out-of-bounds
+    /// taps, i.e. the pad value is −∞).
+    MaxPool { k: usize, stride: usize, pad: usize },
     /// `weight (Out, In)`, `bias (Out,)`.
     Dense { weight: Tensor, bias: Tensor },
     /// NCHW → (N, C·H·W).
@@ -95,7 +105,7 @@ impl Layer {
         out: &mut Vec<f32>,
     ) -> (Vec<usize>, OpCounts) {
         let (shape, mut counts) = match &self.kind {
-            LayerKind::Conv2d { weight, bias, stride, pad } => {
+            LayerKind::Conv2d { weight, bias, stride, pad_h, pad_w, groups } => {
                 let (s, c) = conv2d_into(
                     xd,
                     xshape,
@@ -103,7 +113,9 @@ impl Layer {
                     weight.shape(),
                     bias.data(),
                     *stride,
-                    *pad,
+                    *pad_h,
+                    *pad_w,
+                    *groups,
                     out,
                 );
                 (s.to_vec(), c)
@@ -112,8 +124,8 @@ impl Layer {
                 let (s, c) = avgpool_into(xd, xshape, *k, out);
                 (s.to_vec(), c)
             }
-            LayerKind::MaxPool { k, stride } => {
-                let (s, c) = maxpool_into(xd, xshape, *k, *stride, out);
+            LayerKind::MaxPool { k, stride, pad } => {
+                let (s, c) = maxpool_into(xd, xshape, *k, *stride, *pad, out);
                 (s.to_vec(), c)
             }
             LayerKind::Dense { weight, bias } => {
@@ -134,7 +146,9 @@ impl Layer {
     }
 }
 
-/// Valid/padded strided convolution, NCHW × OIHW → NCHW.
+/// Valid/padded strided convolution, NCHW × OIHW → NCHW (symmetric
+/// padding, dense connectivity — the historical signature; grouped or
+/// asymmetric layers call [`conv2d_into`] directly).
 pub fn conv2d(
     x: &Tensor,
     w: &Tensor,
@@ -143,13 +157,26 @@ pub fn conv2d(
     pad: usize,
 ) -> (Tensor, OpCounts) {
     let mut out = Vec::new();
-    let (shape, counts) =
-        conv2d_into(x.data(), x.shape(), w.data(), w.shape(), b.data(), stride, pad, &mut out);
+    let (shape, counts) = conv2d_into(
+        x.data(),
+        x.shape(),
+        w.data(),
+        w.shape(),
+        b.data(),
+        stride,
+        pad,
+        pad,
+        1,
+        &mut out,
+    );
     (Tensor::new(&shape, out), counts)
 }
 
 /// [`conv2d`] on raw slices into a caller-owned buffer (resized and fully
 /// overwritten); returns the NCHW output shape alongside the counts.
+/// Weight layout is grouped OIHW `(Cout, Cin/groups, kh, kw)`: output
+/// channel `co` reads only the `Cin/groups` input channels of its group
+/// `co / (Cout/groups)`.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_into(
     xd: &[f32],
@@ -158,21 +185,26 @@ pub fn conv2d_into(
     wshape: &[usize],
     bd: &[f32],
     stride: usize,
-    pad: usize,
+    pad_h: usize,
+    pad_w: usize,
+    groups: usize,
     out: &mut Vec<f32>,
 ) -> ([usize; 4], OpCounts) {
     let (bs, cin, h, win) = dims4(xshape);
     let (cout, wcin, kh, kw) = dims4(wshape);
-    assert_eq!(cin, wcin, "channel mismatch {cin} vs {wcin}");
+    assert!(groups >= 1, "groups must be at least 1");
+    assert!(cout % groups == 0, "Cout {cout} not divisible into {groups} groups");
+    assert_eq!(cin, wcin * groups, "channel mismatch {cin} vs {wcin}x{groups} groups");
     assert_eq!(bd.len(), cout, "bias length");
-    let (hp, wp) = (h + 2 * pad, win + 2 * pad);
+    let (hp, wp) = (h + 2 * pad_h, win + 2 * pad_w);
     assert!(hp >= kh && wp >= kw, "kernel larger than padded input");
     let oh = (hp - kh) / stride + 1;
     let ow = (wp - kw) / stride + 1;
+    let cpg = cout / groups;
 
     out.resize(bs * cout * oh * ow, 0.0);
 
-    if pad == 0 {
+    if pad_h == 0 && pad_w == 0 {
         // Fast path (hot in every sweep): contiguous row dot-products, no
         // per-tap bounds checks. ~2× over the general path (see
         // EXPERIMENTS.md §Perf).
@@ -183,13 +215,14 @@ pub fn conv2d_into(
         // order as the naive nest, so results are bit-identical.
         for bi in 0..bs {
             for co in 0..cout {
-                let wbase = co * cin * kh * kw;
+                let wbase = co * wcin * kh * kw;
+                let c0 = (co / cpg) * wcin; // first input channel of co's group
                 for oy in 0..oh {
                     let iy0 = oy * stride;
                     let orow = ((bi * cout + co) * oh + oy) * ow;
                     out[orow..orow + ow].fill(bd[co]);
-                    for ci in 0..cin {
-                        let xc = (bi * cin + ci) * h * win;
+                    for ci in 0..wcin {
+                        let xc = (bi * cin + c0 + ci) * h * win;
                         let wc = wbase + ci * kh * kw;
                         for dy in 0..kh {
                             let xrow0 = xc + (iy0 + dy) * win;
@@ -210,28 +243,29 @@ pub fn conv2d_into(
     } else {
         for bi in 0..bs {
             for co in 0..cout {
-                let wbase = co * cin * kh * kw;
+                let wbase = co * wcin * kh * kw;
+                let c0 = (co / cpg) * wcin;
                 for oy in 0..oh {
                     for ox in 0..ow {
                         let mut acc = bd[co];
                         let iy0 = oy * stride;
                         let ix0 = ox * stride;
-                        for ci in 0..cin {
-                            let xc = (bi * cin + ci) * h * win;
+                        for ci in 0..wcin {
+                            let xc = (bi * cin + c0 + ci) * h * win;
                             let wc = wbase + ci * kh * kw;
                             for dy in 0..kh {
                                 let iy = iy0 + dy;
-                                if iy < pad || iy >= h + pad {
+                                if iy < pad_h || iy >= h + pad_h {
                                     continue;
                                 }
-                                let xrow = xc + (iy - pad) * win;
+                                let xrow = xc + (iy - pad_h) * win;
                                 let wrow = wc + dy * kw;
                                 for dx in 0..kw {
                                     let ix = ix0 + dx;
-                                    if ix < pad || ix >= win + pad {
+                                    if ix < pad_w || ix >= win + pad_w {
                                         continue;
                                     }
-                                    acc += xd[xrow + (ix - pad)] * wd[wrow + dx];
+                                    acc += xd[xrow + (ix - pad_w)] * wd[wrow + dx];
                                 }
                             }
                         }
@@ -242,8 +276,9 @@ pub fn conv2d_into(
         }
     }
     // Counting convention (paper): padded taps still occupy a MAC slot in
-    // the accelerator schedule, so counts use the full kernel volume.
-    let weights = (cout * cin * kh * kw) as u64;
+    // the accelerator schedule, so counts use the full (per-group) kernel
+    // volume — for grouped layers that is Cout · Cin/groups · kh · kw.
+    let weights = (cout * wcin * kh * kw) as u64;
     let positions = (bs * oh * ow) as u64;
     let counts = OpCounts::dense_layer(weights, positions, (bs * cout * oh * ow) as u64);
     ([bs, cout, oh, ow], counts)
@@ -310,35 +345,51 @@ pub fn avgpool_into(
     ([bs, c, oh, ow], counts)
 }
 
-fn maxpool(x: &Tensor, k: usize, stride: usize) -> (Tensor, OpCounts) {
+fn maxpool(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, OpCounts) {
     let mut out = Vec::new();
-    let (shape, counts) = maxpool_into(x.data(), x.shape(), k, stride, &mut out);
+    let (shape, counts) = maxpool_into(x.data(), x.shape(), k, stride, pad, &mut out);
     (Tensor::new(&shape, out), counts)
 }
 
-/// k×k max pooling with the given stride on raw slices into a
-/// caller-owned buffer; returns the NCHW output shape and (zero) counts.
+/// k×k max pooling with the given stride and symmetric zero padding on
+/// raw slices into a caller-owned buffer; returns the NCHW output shape
+/// and (zero) counts. Out-of-bounds taps are skipped, which is the
+/// standard −∞-padding semantics; `pad < k` is required so every window
+/// overlaps the real input.
 pub fn maxpool_into(
     xd: &[f32],
     xshape: &[usize],
     k: usize,
     stride: usize,
+    pad: usize,
     out: &mut Vec<f32>,
 ) -> ([usize; 4], OpCounts) {
     let (bs, c, h, w) = dims4(xshape);
-    assert!(h >= k && w >= k);
-    let oh = (h - k) / stride + 1;
-    let ow = (w - k) / stride + 1;
+    assert!(k >= 1 && stride >= 1, "maxpool kernel/stride must be at least 1");
+    assert!(pad < k, "maxpool pad {pad} must be smaller than kernel {k}");
+    assert!(h + 2 * pad >= k && w + 2 * pad >= k, "kernel larger than padded input");
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
     out.resize(bs * c * oh * ow, 0.0);
     for bi in 0..bs {
         for ci in 0..c {
             let base = (bi * c + ci) * h * w;
             for oy in 0..oh {
                 for ox in 0..ow {
+                    // pad < k guarantees at least one in-bounds tap, so m
+                    // never stays −∞.
                     let mut m = f32::NEG_INFINITY;
                     for dy in 0..k {
+                        let iy = oy * stride + dy;
+                        if iy < pad || iy >= h + pad {
+                            continue;
+                        }
                         for dx in 0..k {
-                            m = m.max(xd[base + (oy * stride + dy) * w + ox * stride + dx]);
+                            let ix = ox * stride + dx;
+                            if ix < pad || ix >= w + pad {
+                                continue;
+                            }
+                            m = m.max(xd[base + (iy - pad) * w + (ix - pad)]);
                         }
                     }
                     out[((bi * c + ci) * oh + oy) * ow + ox] = m;
@@ -447,10 +498,73 @@ mod tests {
     #[test]
     fn maxpool_overlapping() {
         let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32).collect());
-        let (y, _) = maxpool(&x, 3, 2);
+        let (y, _) = maxpool(&x, 3, 2, 0);
         assert_eq!(y.data(), &[8.0]);
-        let (y2, _) = maxpool(&x, 2, 1);
+        let (y2, _) = maxpool(&x, 2, 1, 0);
         assert_eq!(y2.data(), &[4., 5., 7., 8.]);
+    }
+
+    #[test]
+    fn maxpool_padded_stride2() {
+        // 3x3 ramp, k=3 stride=2 pad=1 → 2x2 output; padded taps are
+        // skipped, so each output is the max of the in-bounds window.
+        let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32).collect());
+        let (y, _) = maxpool(&x, 3, 2, 1);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[4.0, 5.0, 7.0, 8.0]);
+        // negative inputs: skipping (not zero-filling) the pad is what
+        // keeps an all-negative window from reporting 0.
+        let xn = Tensor::new(&[1, 1, 2, 2], vec![-4., -3., -2., -1.]);
+        let (yn, _) = maxpool(&xn, 2, 2, 1);
+        assert_eq!(yn.shape(), &[1, 1, 2, 2]);
+        assert_eq!(yn.data(), &[-4., -3., -2., -1.]);
+    }
+
+    #[test]
+    fn grouped_conv_matches_per_group_dense() {
+        // groups=2 conv == two independent dense convs on channel halves
+        let mut v = 0.3f32;
+        let mut next = || {
+            v = (v * 1.7 + 0.13).fract();
+            v - 0.5
+        };
+        let x = Tensor::new(&[1, 4, 5, 6], (0..120).map(|_| next()).collect());
+        let w = Tensor::new(&[6, 2, 2, 3], (0..72).map(|_| next()).collect());
+        let b = Tensor::new(&[6], (0..6).map(|_| next()).collect());
+        let mut out = Vec::new();
+        let (shape, counts) = conv2d_into(
+            x.data(),
+            x.shape(),
+            w.data(),
+            w.shape(),
+            b.data(),
+            1,
+            1,
+            0,
+            2,
+            &mut out,
+        );
+        assert_eq!(shape, [1, 6, 6, 4]);
+        assert_eq!(counts.muls, 6 * 2 * 2 * 3 * 6 * 4);
+        for g in 0..2 {
+            let xg = Tensor::new(&[1, 2, 5, 6], x.data()[g * 60..(g + 1) * 60].to_vec());
+            let wg = Tensor::new(&[3, 2, 2, 3], w.data()[g * 36..(g + 1) * 36].to_vec());
+            let bg = Tensor::new(&[3], b.data()[g * 3..(g + 1) * 3].to_vec());
+            let mut og = Vec::new();
+            conv2d_into(
+                xg.data(),
+                xg.shape(),
+                wg.data(),
+                wg.shape(),
+                bg.data(),
+                1,
+                1,
+                0,
+                1,
+                &mut og,
+            );
+            assert_eq!(&out[g * 72..(g + 1) * 72], &og[..], "group {g}");
+        }
     }
 
     #[test]
@@ -480,7 +594,7 @@ mod tests {
         let b = Tensor::new(&[1], vec![0.25]);
         let layer = Layer::new(
             "c",
-            LayerKind::Conv2d { weight: w, bias: b, stride: 1, pad: 0 },
+            LayerKind::Conv2d { weight: w, bias: b, stride: 1, pad_h: 0, pad_w: 0, groups: 1 },
             Activation::Tanh,
         );
         let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32 * 0.1).collect());

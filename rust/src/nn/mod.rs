@@ -20,7 +20,8 @@ pub mod params;
 
 pub use layers::{Activation, Layer, LayerKind};
 pub use models::{
-    alexnet, lenet5, lenet5_from_params, lenet5_try_from_params, vgg_small, Model, PairedModel,
+    alexnet, grouped_mixer, lenet5, lenet5_from_params, lenet5_try_from_params, vgg_small, Model,
+    PairedModel,
 };
 pub use ops::{ForwardCounts, OpCounts};
 

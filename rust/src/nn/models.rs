@@ -76,8 +76,8 @@ impl Model {
         let mut infos = Vec::new();
         for layer in &self.layers {
             match &layer.kind {
-                LayerKind::Conv2d { weight, bias, stride, pad } => {
-                    let (h, w) = (shape[2] + 2 * pad, shape[3] + 2 * pad);
+                LayerKind::Conv2d { weight, bias, stride, pad_h, pad_w, .. } => {
+                    let (h, w) = (shape[2] + 2 * pad_h, shape[3] + 2 * pad_w);
                     let (kh, kw) = (weight.shape()[2], weight.shape()[3]);
                     let oh = (h - kh) / stride + 1;
                     let ow = (w - kw) / stride + 1;
@@ -92,12 +92,12 @@ impl Model {
                 LayerKind::AvgPool { k } => {
                     shape = vec![shape[0], shape[1], shape[2] / k, shape[3] / k];
                 }
-                LayerKind::MaxPool { k, stride } => {
+                LayerKind::MaxPool { k, stride, pad } => {
                     shape = vec![
                         shape[0],
                         shape[1],
-                        (shape[2] - k) / stride + 1,
-                        (shape[3] - k) / stride + 1,
+                        (shape[2] + 2 * pad - k) / stride + 1,
+                        (shape[3] + 2 * pad - k) / stride + 1,
                     ];
                 }
                 LayerKind::Flatten | LayerKind::Dense { .. } => {}
@@ -251,7 +251,9 @@ pub fn lenet5() -> Model {
                 weight: randt(rng, &[co, ci, k, k], scale),
                 bias: Tensor::zeros(&[co]),
                 stride: 1,
-                pad: 0,
+                pad_h: 0,
+                pad_w: 0,
+                groups: 1,
             },
             Activation::Tanh,
         )
@@ -308,7 +310,9 @@ pub fn lenet5_try_from_params(params: &HashMap<String, Tensor>) -> Result<Model,
                 weight: get(weight_key(name))?,
                 bias: get(bias_key(name))?,
                 stride: 1,
-                pad: 0,
+                pad_h: 0,
+                pad_w: 0,
+                groups: 1,
             },
             Activation::Tanh,
         ))
@@ -351,7 +355,9 @@ pub fn alexnet() -> Model {
                 weight: randt(rng, &[co, ci, k, k], scale),
                 bias: Tensor::zeros(&[co]),
                 stride,
-                pad,
+                pad_h: pad,
+                pad_w: pad,
+                groups: 1,
             },
             Activation::Relu,
         )
@@ -368,13 +374,13 @@ pub fn alexnet() -> Model {
     };
     let layers = vec![
         conv(&mut rng, "conv1", 96, 3, 11, 4, 0),
-        Layer::new("pool1", LayerKind::MaxPool { k: 3, stride: 2 }, Activation::None),
+        Layer::new("pool1", LayerKind::MaxPool { k: 3, stride: 2, pad: 0 }, Activation::None),
         conv(&mut rng, "conv2", 256, 96, 5, 1, 2),
-        Layer::new("pool2", LayerKind::MaxPool { k: 3, stride: 2 }, Activation::None),
+        Layer::new("pool2", LayerKind::MaxPool { k: 3, stride: 2, pad: 0 }, Activation::None),
         conv(&mut rng, "conv3", 384, 256, 3, 1, 1),
         conv(&mut rng, "conv4", 384, 384, 3, 1, 1),
         conv(&mut rng, "conv5", 256, 384, 3, 1, 1),
-        Layer::new("pool5", LayerKind::MaxPool { k: 3, stride: 2 }, Activation::None),
+        Layer::new("pool5", LayerKind::MaxPool { k: 3, stride: 2, pad: 0 }, Activation::None),
         Layer::new("flat", LayerKind::Flatten, Activation::None),
         dense(&mut rng, "fc6", 4096, 256 * 6 * 6),
         dense(&mut rng, "fc7", 4096, 4096),
@@ -409,7 +415,9 @@ pub fn vgg_small() -> Model {
             Activation::Relu,
         )
     };
-    let pool = |name: &str| Layer::new(name, LayerKind::MaxPool { k: 2, stride: 2 }, Activation::None);
+    let pool = |name: &str| {
+        Layer::new(name, LayerKind::MaxPool { k: 2, stride: 2, pad: 0 }, Activation::None)
+    };
     let layers = vec![
         conv(&mut rng, "conv1_1", 32, 3),
         conv(&mut rng, "conv1_2", 32, 32),
@@ -441,6 +449,60 @@ pub fn vgg_small() -> Model {
     Model::new("vgg_small", layers)
 }
 
+/// A small network exercising every generalized geometry at once:
+/// grouped convs, non-square kernels, asymmetric padding, and padded
+/// stride-2 max pooling. No paper model looks like this — it exists so
+/// the plan pipeline, engine kernels, and benches cover the full
+/// geometry space, not just LeNet/AlexNet shapes.
+///
+/// Input `(B, 8, 20, 16)`:
+/// - `gconv1`: 16×(8/2)×3×5, groups 2, stride 1, pad (1, 2) → `(16, 20, 16)`
+/// - `pool1`:  max 3×3, stride 2, pad 1                      → `(16, 10, 8)`
+/// - `gconv2`: 32×(16/4)×5×3, groups 4, stride 2, pad (2, 1) → `(32, 5, 4)`
+/// - flatten + dense → 10 logits
+pub fn grouped_mixer() -> Model {
+    let mut rng = Rng::seed_from_u64(47);
+    let conv = |rng: &mut Rng,
+                name: &str,
+                co: usize,
+                cipg: usize,
+                kh: usize,
+                kw: usize,
+                stride: usize,
+                pad_h: usize,
+                pad_w: usize,
+                groups: usize| {
+        let scale = (2.0 / ((cipg * kh * kw) as f32)).sqrt();
+        Layer::new(
+            name,
+            LayerKind::Conv2d {
+                weight: randt(rng, &[co, cipg, kh, kw], scale),
+                bias: randt(rng, &[co], 0.1),
+                stride,
+                pad_h,
+                pad_w,
+                groups,
+            },
+            Activation::Relu,
+        )
+    };
+    let layers = vec![
+        conv(&mut rng, "gconv1", 16, 4, 3, 5, 1, 1, 2, 2),
+        Layer::new("pool1", LayerKind::MaxPool { k: 3, stride: 2, pad: 1 }, Activation::None),
+        conv(&mut rng, "gconv2", 32, 4, 5, 3, 2, 2, 1, 4),
+        Layer::new("flat", LayerKind::Flatten, Activation::None),
+        Layer::new(
+            "fc",
+            LayerKind::Dense {
+                weight: randt(&mut rng, &[10, 32 * 5 * 4], 0.05),
+                bias: Tensor::zeros(&[10]),
+            },
+            Activation::None,
+        ),
+    ];
+    Model::new("grouped_mixer", layers)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -459,6 +521,18 @@ mod tests {
             .map(|(_, c)| c.muls)
             .sum();
         assert!(conv_muls > 35_000_000 && conv_muls < 45_000_000, "{conv_muls}");
+    }
+
+    #[test]
+    fn grouped_mixer_shapes() {
+        let m = grouped_mixer();
+        let x = Tensor::zeros(&[2, 8, 20, 16]);
+        let (y, _) = m.forward(&x);
+        assert_eq!(y.shape(), &[2, 10]);
+        let infos = m.conv_layers(&[1, 8, 20, 16]);
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].out_positions, 20 * 16);
+        assert_eq!(infos[1].out_positions, 5 * 4);
     }
 
     #[test]

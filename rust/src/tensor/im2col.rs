@@ -40,17 +40,26 @@ pub struct Im2colShape {
     pub out_w: usize,
 }
 
-/// Output geometry for an NCHW input under the given kernel/stride/pad.
-/// Panics on impossible geometry (the callers treat that as a
-/// programming error, matching the engine's assert conventions).
-pub fn im2col_shape(shape: &[usize], kh: usize, kw: usize, stride: usize, pad: usize) -> Im2colShape {
+/// Output geometry for an NCHW input under the given kernel/stride and
+/// (possibly asymmetric) zero padding: `pad_h` rows above and below,
+/// `pad_w` columns left and right. Panics on impossible geometry (the
+/// callers treat that as a programming error, matching the engine's
+/// assert conventions).
+pub fn im2col_shape(
+    shape: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+) -> Im2colShape {
     assert_eq!(shape.len(), 4, "im2col expects NCHW, got {shape:?}");
     assert!(stride >= 1, "stride must be >= 1");
     let (b, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
-    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let (hp, wp) = (h + 2 * pad_h, w + 2 * pad_w);
     assert!(
         hp >= kh && wp >= kw,
-        "kernel {kh}x{kw} larger than input {h}x{w} (pad {pad})"
+        "kernel {kh}x{kw} larger than input {h}x{w} (pad {pad_h}x{pad_w})"
     );
     let oh = (hp - kh) / stride + 1;
     let ow = (wp - kw) / stride + 1;
@@ -62,13 +71,21 @@ pub fn im2col_shape(shape: &[usize], kh: usize, kw: usize, stride: usize, pad: u
 /// `x`: `(B, C, H, W)` → rows ordered `(b, oy, ox)`, columns ordered
 /// `(c, dy, dx)`.
 pub fn im2col(x: &Tensor, kh: usize, kw: usize) -> Im2col {
-    im2col_geo(x, kh, kw, 1, 0)
+    im2col_geo(x, kh, kw, 1, 0, 0)
 }
 
-/// [`im2col`] generalized to strided, zero-padded convolution.
-pub fn im2col_geo(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -> Im2col {
+/// [`im2col`] generalized to strided, zero-padded convolution with
+/// independent row/column padding.
+pub fn im2col_geo(
+    x: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+) -> Im2col {
     let mut buf = Vec::new();
-    let s = im2col_into(x, kh, kw, stride, pad, &mut buf);
+    let s = im2col_into(x, kh, kw, stride, pad_h, pad_w, &mut buf);
     Im2col {
         patches: Tensor::new(&[s.rows, s.k], buf),
         batch: s.batch,
@@ -81,31 +98,35 @@ pub fn im2col_geo(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -
 /// Patch extraction into a caller-owned buffer. The buffer is resized to
 /// `rows * k` and fully overwritten; reusing one buffer across calls of
 /// the same geometry performs zero allocation after the first call.
+#[allow(clippy::too_many_arguments)]
 pub fn im2col_into(
     x: &Tensor,
     kh: usize,
     kw: usize,
     stride: usize,
-    pad: usize,
+    pad_h: usize,
+    pad_w: usize,
     out: &mut Vec<f32>,
 ) -> Im2colShape {
-    im2col_slice_into(x.data(), x.shape(), kh, kw, stride, pad, out)
+    im2col_slice_into(x.data(), x.shape(), kh, kw, stride, pad_h, pad_w, out)
 }
 
 /// [`im2col_into`] on a raw NCHW slice. The whole-network executor in
 /// [`crate::exec`] keeps activations in reusable scratch buffers rather
 /// than `Tensor`s, so the engine needs an entry point that never touches
 /// a tensor handle.
+#[allow(clippy::too_many_arguments)]
 pub fn im2col_slice_into(
     xd: &[f32],
     shape: &[usize],
     kh: usize,
     kw: usize,
     stride: usize,
-    pad: usize,
+    pad_h: usize,
+    pad_w: usize,
     out: &mut Vec<f32>,
 ) -> Im2colShape {
-    let s = im2col_shape(shape, kh, kw, stride, pad);
+    let s = im2col_shape(shape, kh, kw, stride, pad_h, pad_w);
     let (b, c) = (shape[0], shape[1]);
     let (h, w) = (shape[2], shape[3]);
     debug_assert_eq!(xd.len(), b * c * h * w, "data length vs shape {shape:?}");
@@ -113,7 +134,7 @@ pub fn im2col_slice_into(
     let k = s.k;
     out.resize(s.rows * k, 0.0);
 
-    if pad == 0 {
+    if pad_h == 0 && pad_w == 0 {
         // Fast path: every tap is in bounds — contiguous row copies.
         for bi in 0..b {
             for oy in 0..oh {
@@ -148,14 +169,14 @@ pub fn im2col_slice_into(
                             let iy = iy0 + dy;
                             for dx in 0..kw {
                                 let ix = ix0 + dx;
-                                out[row + col] = if iy < pad
-                                    || iy >= h + pad
-                                    || ix < pad
-                                    || ix >= w + pad
+                                out[row + col] = if iy < pad_h
+                                    || iy >= h + pad_h
+                                    || ix < pad_w
+                                    || ix >= w + pad_w
                                 {
                                     0.0
                                 } else {
-                                    xd[base + (iy - pad) * w + (ix - pad)]
+                                    xd[base + (iy - pad_h) * w + (ix - pad_w)]
                                 };
                                 col += 1;
                             }
@@ -186,12 +207,13 @@ pub fn im2col_rows_into(
     kh: usize,
     kw: usize,
     stride: usize,
-    pad: usize,
+    pad_h: usize,
+    pad_w: usize,
     row0: usize,
     nrows: usize,
     out: &mut Vec<f32>,
 ) -> Im2colShape {
-    let s = im2col_shape(shape, kh, kw, stride, pad);
+    let s = im2col_shape(shape, kh, kw, stride, pad_h, pad_w);
     assert!(
         row0 + nrows <= s.rows,
         "row strip {row0}+{nrows} out of range ({} rows)",
@@ -212,7 +234,7 @@ pub fn im2col_rows_into(
         let row = i * k;
         let (iy0, ix0) = (oy * stride, ox * stride);
         let mut col = 0;
-        if pad == 0 {
+        if pad_h == 0 && pad_w == 0 {
             // Fast path: every tap is in bounds — contiguous row copies.
             for ci in 0..c {
                 let base = ((bi * c + ci) * h + iy0) * w + ix0;
@@ -231,12 +253,12 @@ pub fn im2col_rows_into(
                     let iy = iy0 + dy;
                     for dx in 0..kw {
                         let ix = ix0 + dx;
-                        out[row + col] = if iy < pad || iy >= h + pad || ix < pad || ix >= w + pad
-                        {
-                            0.0
-                        } else {
-                            xd[base + (iy - pad) * w + (ix - pad)]
-                        };
+                        out[row + col] =
+                            if iy < pad_h || iy >= h + pad_h || ix < pad_w || ix >= w + pad_w {
+                                0.0
+                            } else {
+                                xd[base + (iy - pad_h) * w + (ix - pad_w)]
+                            };
                         col += 1;
                     }
                 }
@@ -292,7 +314,7 @@ mod tests {
     fn stride_skips_positions() {
         // 1x1x5x5, 3x3 kernel, stride 2 → 2x2 output grid
         let x = Tensor::new(&[1, 1, 5, 5], (0..25).map(|v| v as f32).collect());
-        let ic = im2col_geo(&x, 3, 3, 2, 0);
+        let ic = im2col_geo(&x, 3, 3, 2, 0, 0);
         assert_eq!((ic.out_h, ic.out_w), (2, 2));
         // patch at (oy=0, ox=1) starts at input column 2
         assert_eq!(&ic.patches.data()[9..12], &[2., 3., 4.]);
@@ -304,7 +326,7 @@ mod tests {
     fn padding_reads_zeros() {
         // 1x1x2x2, 3x3 kernel, pad 1 → 2x2 output; corner patch sees 5 zeros
         let x = Tensor::new(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
-        let ic = im2col_geo(&x, 3, 3, 1, 1);
+        let ic = im2col_geo(&x, 3, 3, 1, 1, 1);
         assert_eq!((ic.out_h, ic.out_w), (2, 2));
         // patch at (0,0): padded border on top and left
         assert_eq!(
@@ -314,10 +336,28 @@ mod tests {
     }
 
     #[test]
+    fn asymmetric_padding_pads_each_axis_independently() {
+        // pad_h 1, pad_w 0 on a 2x3 input with a 3x3 kernel: rows are
+        // padded, columns are not → 2x1 output grid
+        let x = Tensor::new(&[1, 1, 2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let ic = im2col_geo(&x, 3, 3, 1, 1, 0);
+        assert_eq!((ic.out_h, ic.out_w), (2, 1));
+        // patch at (0,0): zero top row, then the two real rows
+        assert_eq!(&ic.patches.data()[0..9], &[0., 0., 0., 1., 2., 3., 4., 5., 6.]);
+        // patch at (1,0): the two real rows, then a zero bottom row
+        assert_eq!(&ic.patches.data()[9..18], &[1., 2., 3., 4., 5., 6., 0., 0., 0.]);
+        // and the transpose case: pad_w only
+        let xt = Tensor::new(&[1, 1, 3, 2], vec![1., 4., 2., 5., 3., 6.]);
+        let it = im2col_geo(&xt, 3, 3, 1, 0, 1);
+        assert_eq!((it.out_h, it.out_w), (1, 2));
+        assert_eq!(&it.patches.data()[0..9], &[0., 1., 4., 0., 2., 5., 0., 3., 6.]);
+    }
+
+    #[test]
     fn pad_stride_zero_equals_original() {
         let x = Tensor::new(&[2, 3, 6, 5], (0..180).map(|v| v as f32 * 0.5).collect());
         let a = im2col(&x, 3, 2);
-        let b = im2col_geo(&x, 3, 2, 1, 0);
+        let b = im2col_geo(&x, 3, 2, 1, 0, 0);
         assert_eq!(a.patches.data(), b.patches.data());
         assert_eq!((a.out_h, a.out_w), (b.out_h, b.out_w));
     }
@@ -327,22 +367,29 @@ mod tests {
         // every (geometry, strip placement) agrees element-for-element
         // with the corresponding rows of the full patch matrix
         let x = Tensor::new(&[2, 3, 7, 6], (0..252).map(|v| v as f32 * 0.25 - 13.0).collect());
-        for (kh, kw, stride, pad) in [(3, 3, 1, 0), (3, 2, 2, 0), (3, 3, 1, 1), (5, 5, 2, 2)] {
+        for (kh, kw, stride, ph, pw) in [
+            (3, 3, 1, 0, 0),
+            (3, 2, 2, 0, 0),
+            (3, 3, 1, 1, 1),
+            (5, 5, 2, 2, 2),
+            (3, 5, 1, 1, 2),
+            (5, 2, 2, 2, 0),
+        ] {
             let mut full = Vec::new();
-            let s = im2col_into(&x, kh, kw, stride, pad, &mut full);
+            let s = im2col_into(&x, kh, kw, stride, ph, pw, &mut full);
             let mut strip = vec![77.0; 3]; // stale garbage must be overwritten
             for nrows in [1usize, 3, s.rows] {
                 let mut row0 = 0;
                 while row0 < s.rows {
                     let n = nrows.min(s.rows - row0);
                     let got = im2col_rows_into(
-                        x.data(), x.shape(), kh, kw, stride, pad, row0, n, &mut strip,
+                        x.data(), x.shape(), kh, kw, stride, ph, pw, row0, n, &mut strip,
                     );
                     assert_eq!(got, s);
                     assert_eq!(
                         &strip[..n * s.k],
                         &full[row0 * s.k..(row0 + n) * s.k],
-                        "strip [{row0}, {row0}+{n}) diverged (k{kh}x{kw} s{stride} p{pad})"
+                        "strip [{row0}, {row0}+{n}) diverged (k{kh}x{kw} s{stride} p{ph}x{pw})"
                     );
                     row0 += n;
                 }
@@ -355,23 +402,23 @@ mod tests {
     fn row_strip_past_end_panics() {
         let x = Tensor::zeros(&[1, 1, 3, 3]);
         let mut strip = Vec::new();
-        im2col_rows_into(x.data(), x.shape(), 2, 2, 1, 0, 3, 2, &mut strip);
+        im2col_rows_into(x.data(), x.shape(), 2, 2, 1, 0, 0, 3, 2, &mut strip);
     }
 
     #[test]
     fn into_buffer_reuse_overwrites_fully() {
         let mut buf = vec![99.0; 4];
         let x = Tensor::new(&[1, 1, 3, 3], (0..9).map(|v| v as f32).collect());
-        let s = im2col_into(&x, 2, 2, 1, 0, &mut buf);
+        let s = im2col_into(&x, 2, 2, 1, 0, 0, &mut buf);
         assert_eq!(s.rows * s.k, 16);
         assert_eq!(buf.len(), 16);
         let first = buf.clone();
         // second run with a padded geometry must not leak stale values
-        let s2 = im2col_into(&x, 3, 3, 1, 1, &mut buf);
+        let s2 = im2col_into(&x, 3, 3, 1, 1, 1, &mut buf);
         assert_eq!(buf.len(), s2.rows * s2.k);
         assert_eq!(buf[0], 0.0); // padded corner
         // and back again reproduces the first result exactly
-        im2col_into(&x, 2, 2, 1, 0, &mut buf);
+        im2col_into(&x, 2, 2, 1, 0, 0, &mut buf);
         assert_eq!(&buf[..16], &first[..]);
     }
 }

@@ -1,0 +1,228 @@
+//! Full-geometry sweep: grouped convolutions, non-square kernels,
+//! asymmetric padding, and stride > 1 must agree *bit-for-bit* across
+//! three independently written paths —
+//!
+//!   1. the tile-blocked microkernel (every tile size × thread count),
+//!   2. the untiled packed reference (`forward_packed_reference`),
+//!   3. a naive direct convolution over the pairing tables written here
+//!      with no im2col and no tiling,
+//!
+//! and to 1e-4 of a dense grouped convolution over the snapped weights.
+//! The naive path is bit-identical (not merely close) because it
+//! reproduces the engine's per-element reduction order exactly: pair
+//! lane summed in table order, then the MAC lane, then
+//! `bias + pair + mac`. Tiling, sharding, and im2col only change which
+//! *elements* are computed when, never the order of a single element's
+//! reduction.
+
+use subaccel::accel::{ConvEngine, LayerPairing, SubConv2d};
+use subaccel::error::SubaccelError;
+use subaccel::nn::layers::conv2d_into;
+use subaccel::tensor::Tensor;
+use subaccel::util::{forall, Gen};
+
+/// Direct convolution over the packed pairing tables: decode each tap
+/// index to (channel, dy, dx) and read the padded input directly.
+/// Out-of-bounds taps read the zero padding.
+fn naive_paired_conv(unit: &SubConv2d, x: &Tensor) -> Tensor {
+    let geo = unit.geometry();
+    let packed = unit.packed();
+    let bias = unit.bias().data();
+    let (batch, cin, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (kh, kw) = (geo.kh, geo.kw);
+    let khw = kh * kw;
+    let wcin = packed.k_len() / khw; // input channels per group
+    assert_eq!(cin, wcin * geo.groups, "input channels vs grouped weights");
+    let cpg = packed.cout / geo.groups; // output channels per group
+    let oh = (h + 2 * geo.pad_h - kh) / geo.stride + 1;
+    let ow = (w + 2 * geo.pad_w - kw) / geo.stride + 1;
+    let xd = x.data();
+    // one padded tap read, 0.0 outside the input
+    let tap = |b: usize, ch: usize, iy: isize, ix: isize| -> f32 {
+        if iy < 0 || ix < 0 || iy as usize >= h || ix as usize >= w {
+            0.0
+        } else {
+            xd[((b * cin + ch) * h + iy as usize) * w + ix as usize]
+        }
+    };
+    let mut out = vec![0.0f32; batch * packed.cout * oh * ow];
+    for b in 0..batch {
+        for c in 0..packed.cout {
+            let c0 = (c / cpg) * wcin; // first input channel of c's group
+            let (i1, i2, kk) = packed.pairs(c);
+            let (ui, uw) = packed.unpaired(c);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let at = |idx: u32| {
+                        let idx = idx as usize;
+                        let (ci, rem) = (idx / khw, idx % khw);
+                        let iy = (oy * geo.stride + rem / kw) as isize - geo.pad_h as isize;
+                        let ix = (ox * geo.stride + rem % kw) as isize - geo.pad_w as isize;
+                        tap(b, c0 + ci, iy, ix)
+                    };
+                    let mut pair_acc = 0.0f32;
+                    for j in 0..kk.len() {
+                        pair_acc += kk[j] * (at(i1[j]) - at(i2[j]));
+                    }
+                    let mut mac_acc = 0.0f32;
+                    for j in 0..uw.len() {
+                        mac_acc += uw[j] * at(ui[j]);
+                    }
+                    out[((b * packed.cout + c) * oh + oy) * ow + ox] =
+                        bias[c] + pair_acc + mac_acc;
+                }
+            }
+        }
+    }
+    Tensor::new(&[batch, packed.cout, oh, ow], out)
+}
+
+/// Random full-geometry conv problem: non-square kernel, possibly
+/// asymmetric padding, stride 1–3, groups 1–3.
+fn random_geometry(g: &mut Gen) -> (Tensor, Tensor, Tensor, f32, SubConv2d) {
+    let groups = 1 + g.rng.below(3);
+    let cpg = 1 + g.rng.below(3);
+    let wcin = 1 + g.rng.below(2);
+    let cout = groups * cpg;
+    let cin = groups * wcin;
+    let kh = 1 + g.rng.below(3);
+    let mut kw = 1 + g.rng.below(3);
+    if kw == kh {
+        kw = kh % 3 + 1; // force non-square: square kernels are covered elsewhere
+    }
+    let stride = 1 + g.rng.below(3);
+    let (pad_h, pad_w) = (g.rng.below(3), g.rng.below(3));
+    let (h, w) = (kh + g.rng.below(6), kw + g.rng.below(6));
+    let batch = 1 + g.rng.below(2);
+    let weight = Tensor::new(&[cout, wcin, kh, kw], g.rng.vec_normal(cout * wcin * kh * kw));
+    let bias = Tensor::new(&[cout], g.rng.vec_normal(cout));
+    let x = Tensor::new(&[batch, cin, h, w], g.rng.vec_normal(batch * cin * h * w));
+    let rounding = [0.0f32, 0.05, 0.2][g.rng.below(3)];
+    let geo = subaccel::accel::ConvGeometry { kh, kw, stride, pad_h, pad_w, groups };
+    let unit = SubConv2d::compile_with(&weight, &bias, rounding, geo)
+        .unwrap_or_else(|e| panic!("compile_with: {e}"));
+    (weight, bias, x, rounding, unit)
+}
+
+#[test]
+fn geometry_sweep_tiled_untiled_naive_bit_identical() {
+    let engines: Vec<ConvEngine> = [(1usize, 1usize), (2, 3), (4, 8), (3, 4096)]
+        .iter()
+        .map(|&(t, tile)| ConvEngine::with_tile_rows(t, tile).unwrap())
+        .chain([ConvEngine::serial(), ConvEngine::new(2).unwrap()])
+        .collect();
+    forall("geometry-sweep", 0x6E0_2026, 40, |g| {
+        let (_, _, x, _, unit) = random_geometry(g);
+        let geo = unit.geometry();
+        let tag = format!(
+            "k {}x{} stride {} pad ({},{}) groups {}",
+            geo.kh, geo.kw, geo.stride, geo.pad_h, geo.pad_w, geo.groups
+        );
+        let (want, want_counts) =
+            ConvEngine::forward_packed_reference(unit.packed(), unit.bias(), geo, &x)
+                .map_err(|e| format!("{tag}: reference: {e}"))?;
+        // naive direct conv (no im2col, no tiling) — must be exact
+        let naive = naive_paired_conv(&unit, &x);
+        if naive != want {
+            return Err(format!(
+                "{tag}: naive direct conv diverged from reference (max |Δ| {})",
+                naive.max_abs_diff(&want)
+            ));
+        }
+        // every tiled/threaded engine — must be exact
+        for engine in &engines {
+            let (got, counts) = unit.forward_with(engine, &x).map_err(|e| {
+                format!("{tag} t={} tile={:?}: {e}", engine.threads(), engine.tile_rows())
+            })?;
+            if got != want {
+                return Err(format!(
+                    "{tag} t={} tile={:?}: diverged (max |Δ| {})",
+                    engine.threads(),
+                    engine.tile_rows(),
+                    got.max_abs_diff(&want)
+                ));
+            }
+            if counts != want_counts {
+                return Err(format!("{tag}: op counts diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn geometry_sweep_matches_dense_grouped_oracle() {
+    // Pairing snaps weights but never changes the arithmetic: a dense
+    // grouped convolution over the snapped weights is the independent
+    // numeric oracle (different summation order, hence the tolerance).
+    let engine = ConvEngine::new(3).unwrap();
+    forall("geometry-dense-oracle", 0xD0_2026, 30, |g| {
+        let (weight, bias, x, rounding, unit) = random_geometry(g);
+        let geo = unit.geometry();
+        let (got, _) = unit
+            .forward_with(&engine, &x)
+            .map_err(|e| format!("engine forward: {e}"))?;
+        let snapped = LayerPairing::from_weights(&weight, rounding).modified_weights(&weight);
+        let mut dense = Vec::new();
+        let (shape, _) = conv2d_into(
+            x.data(),
+            x.shape(),
+            snapped.data(),
+            snapped.shape(),
+            bias.data(),
+            geo.stride,
+            geo.pad_h,
+            geo.pad_w,
+            geo.groups,
+            &mut dense,
+        );
+        let want = Tensor::new(&shape, dense);
+        if got.shape() != want.shape() {
+            return Err(format!("shape {:?} != dense {:?}", got.shape(), want.shape()));
+        }
+        let diff = got.max_abs_diff(&want);
+        if diff > 1e-4 {
+            return Err(format!(
+                "k {}x{} stride {} pad ({},{}) groups {}: max |Δ| {diff} > 1e-4",
+                geo.kh, geo.kw, geo.stride, geo.pad_h, geo.pad_w, geo.groups
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn invalid_geometries_are_typed_errors() {
+    let mut rng = subaccel::util::Rng::seed_from_u64(9);
+    let weight = Tensor::new(&[4, 2, 3, 5], rng.vec_normal(4 * 2 * 3 * 5));
+    let bias = Tensor::zeros(&[4]);
+    let geo = |groups: usize, stride: usize| subaccel::accel::ConvGeometry {
+        kh: 3,
+        kw: 5,
+        stride,
+        pad_h: 1,
+        pad_w: 2,
+        groups,
+    };
+    // cout = 4 not divisible by groups = 3
+    match SubConv2d::compile_with(&weight, &bias, 0.1, geo(3, 1)) {
+        Err(SubaccelError::InvalidConfig { field, .. }) => assert_eq!(field, "groups"),
+        other => panic!("expected InvalidConfig(groups), got {other:?}"),
+    }
+    // stride 0
+    match SubConv2d::compile_with(&weight, &bias, 0.1, geo(1, 0)) {
+        Err(SubaccelError::InvalidConfig { field, .. }) => assert_eq!(field, "stride"),
+        other => panic!("expected InvalidConfig(stride), got {other:?}"),
+    }
+    // valid grouped compile, wrong input channel count → typed K mismatch
+    let unit = SubConv2d::compile_with(&weight, &bias, 0.1, geo(2, 1)).unwrap();
+    let engine = ConvEngine::new(2).unwrap();
+    let bad = Tensor::zeros(&[1, 3, 8, 9]); // needs cin = 2·2 = 4
+    match unit.forward_with(&engine, &bad) {
+        Err(SubaccelError::KernelMismatch { expected_k, got_k }) => {
+            assert_eq!(expected_k, 2 * (2 * 3 * 5));
+            assert_eq!(got_k, 3 * 3 * 5);
+        }
+        other => panic!("expected KernelMismatch, got {other:?}"),
+    }
+}

@@ -7,7 +7,7 @@
 //! geometry), at rounding 0.0 and 0.05, on serial and multi-threaded
 //! engines.
 
-use subaccel::accel::{ConvEngine, SubConv2d};
+use subaccel::accel::{ConvEngine, ConvGeometry, SubConv2d};
 use subaccel::nn::{
     alexnet, lenet5, Activation, ForwardCounts, Layer, LayerKind, Model, PairedModel,
 };
@@ -49,8 +49,16 @@ impl Reference {
             .layers
             .iter()
             .map(|layer| match &layer.kind {
-                LayerKind::Conv2d { weight, bias, stride, pad } => {
-                    Some(SubConv2d::compile_geo(weight, bias, rounding, *stride, *pad))
+                LayerKind::Conv2d { weight, bias, stride, pad_h, pad_w, groups } => {
+                    let geo = ConvGeometry {
+                        kh: weight.shape()[2],
+                        kw: weight.shape()[3],
+                        stride: *stride,
+                        pad_h: *pad_h,
+                        pad_w: *pad_w,
+                        groups: *groups,
+                    };
+                    Some(SubConv2d::compile_with(weight, bias, rounding, geo).unwrap())
                 }
                 _ => None,
             })

@@ -39,8 +39,8 @@ cargo test -q
 echo "== cargo fmt --check =="
 cargo fmt --check
 
-echo "== cargo clippy -- -D warnings =="
-cargo clippy -- -D warnings
+echo "== cargo clippy -q -- -D warnings =="
+cargo clippy -q -- -D warnings
 
 if [ "$smoke" = 1 ]; then
     for bench in benches/*.rs; do
