@@ -11,13 +11,15 @@
 //!
 //! Run: `cargo bench --bench conv_hotpath`
 
-use subaccel::accel::{tile_rows_heuristic, ConvEngine, SubConv2d};
+use subaccel::accel::{
+    autotune_conv, tile_rows_heuristic, AutotuneBudget, ConvEngine, SubConv2d, TileCache,
+};
 use subaccel::data::load_weights;
 use subaccel::nn::layers::conv2d;
 use subaccel::nn::{lenet5, lenet5_from_params, PairedModel};
 use subaccel::runtime::{LeNet5Executor, Runtime, Variant};
 use subaccel::tensor::Tensor;
-use subaccel::util::{bench, bench_header, JsonReport, Rng};
+use subaccel::util::{baseline_ns, bench, bench_header, bench_smoke, JsonReport, Rng};
 
 fn main() {
     let mut rng = Rng::seed_from_u64(42);
@@ -113,14 +115,108 @@ fn main() {
     json.push(&rref, &[("ops", aops), ("threads", 1.0), ("tile_rows", 0.0)]);
     json.push(&rtiled, &[("ops", aops), ("threads", 1.0), ("tile_rows", tile as f64)]);
 
+    // --- plan-warm autotune sweep, same alexnet-class layer --------------
+    // Acceptance gate (ISSUE 10): the measured sweep's winning tile must
+    // not regress the static-heuristic tile by more than 10% on this
+    // layer, and when scripts/check.sh --smoke passes the previous
+    // trajectory through SUBACCEL_BENCH_BASELINE, the fresh autotuned
+    // number is also gated against the recorded one — but only when both
+    // sides are real measurements (smoke numbers prove shape, not speed).
+    let budget = AutotuneBudget::measured(if bench_smoke() { 1 } else { 3 });
+    let d = autotune_conv(
+        &e1,
+        asc.packed(),
+        asc.bias().data(),
+        asc.geometry(),
+        &[1, 96, 27, 27],
+        "alexconv2",
+        &budget,
+    );
+    println!(
+        "\n# plan-warm autotune, alexconv2: tile {} rows ({}, {} candidates swept)",
+        d.tile_rows,
+        d.source.as_str(),
+        d.candidates
+    );
+    let mut aout = Vec::new();
+    let rheur = bench("alexconv2 heuristic tile t=1", 1, 5, || {
+        e1.forward_packed_tiled_slice_into(
+            asc.packed(),
+            asc.bias().data(),
+            asc.geometry(),
+            ax.data(),
+            &[1, 96, 27, 27],
+            None,
+            &mut aout,
+        )
+        .unwrap();
+        aout.len()
+    });
+    println!("{}", rheur.report());
+    let rtuned = bench("alexconv2 autotuned t=1", 1, 5, || {
+        e1.forward_packed_tiled_slice_into(
+            asc.packed(),
+            asc.bias().data(),
+            asc.geometry(),
+            ax.data(),
+            &[1, 96, 27, 27],
+            Some(d.tile_rows),
+            &mut aout,
+        )
+        .unwrap();
+        aout.len()
+    });
+    let tuned_vs_heur = rheur.mean.as_secs_f64() / rtuned.mean.as_secs_f64();
+    println!("{}  [{tuned_vs_heur:.2}x vs heuristic tile]", rtuned.report());
+    // bit-identity gate: the autotuned tile is just another regrouping
+    assert_eq!(aout.as_slice(), want.data(), "autotuned tile diverged from reference");
+    if !bench_smoke() {
+        assert!(
+            rtuned.mean.as_secs_f64() <= rheur.mean.as_secs_f64() * 1.10,
+            "autotuned tile {} regressed >10% vs heuristic: {:?} vs {:?}",
+            d.tile_rows,
+            rtuned.mean,
+            rheur.mean
+        );
+    }
+    json.push(&rheur, &[("ops", aops), ("threads", 1.0), ("tile_rows", tile as f64)]);
+    json.push(&rtuned, &[("ops", aops), ("threads", 1.0), ("tile_rows", d.tile_rows as f64)]);
+    TileCache::record(&mut json, "alexconv2", std::slice::from_ref(&d));
+    // cross-run regression gate against the recorded trajectory
+    let baseline = std::env::var("SUBACCEL_BENCH_BASELINE")
+        .ok()
+        .and_then(|p| baseline_ns(&p, "alexconv2 autotuned t=1"));
+    match baseline {
+        Some((base_ns, false)) if !bench_smoke() => {
+            let fresh_ns = rtuned.mean.as_nanos() as f64;
+            assert!(
+                fresh_ns <= base_ns * 1.10,
+                "autotuned alexconv2 regressed >10% vs recorded trajectory: \
+                 {fresh_ns:.0}ns vs {base_ns:.0}ns"
+            );
+            println!("  -> trajectory gate OK: {fresh_ns:.0}ns vs recorded {base_ns:.0}ns");
+        }
+        Some(_) => println!("SKIP trajectory gate: smoke-mode numbers on one side"),
+        None => println!("SKIP trajectory gate: no recorded baseline entry"),
+    }
+
     // --- whole-network plan executor (zero-alloc steady state) ----------
     let m = lenet5();
     let pm = PairedModel::compile(&m, 0.05);
     let plan = pm.compiled().plan(&[8, 1, 32, 32]).expect("plan");
     let mut exe = plan.into_executor();
-    exe.warm();
+    // warm + one-shot tile sweep (deterministic cost-model mode); a
+    // previous trajectory warm-starts the sweep when scripts/check.sh
+    // --smoke passes it back through SUBACCEL_AUTOTUNE_CACHE
+    let cache = TileCache::from_env();
+    let decisions =
+        exe.warm_autotuned(&e1, &AutotuneBudget::default(), cache.as_ref()).to_vec();
     let xb = Tensor::new(&[8, 1, 32, 32], rng.vec_range(8 * 1024, 0.0, 1.0));
     println!("\n# whole-network plan executor, lenet5 b8 (rounding 0.05)");
+    for d in &decisions {
+        println!("  autotune {}: tile {} rows ({})", d.layer, d.tile_rows, d.source.as_str());
+    }
+    TileCache::record(&mut json, "lenet5", &decisions);
     let mut out = Vec::new();
     let r = bench("lenet5 plan forward_into b8 t=1", 3, 30, || {
         exe.forward_into(&e1, &xb, &mut out).expect("plan forward");

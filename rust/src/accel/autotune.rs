@@ -1,0 +1,527 @@
+//! Plan-warm row-tile autotuning.
+//!
+//! [`tile_rows_heuristic`] picks a sane tile from layer *shape* alone,
+//! but the best tile also depends on the host (cache sizes, core count,
+//! memory bandwidth) and on how many rows the layer actually has at the
+//! planned batch size. This module runs a **one-shot bounded sweep** per
+//! conv layer at plan-warm time — when allocation is already allowed and
+//! the hot path has not started — and records the winner in the
+//! [`crate::exec::ExecutionPlan`], which then passes it to the engine as
+//! a per-call tile on every forward.
+//!
+//! Override precedence, highest first (pinned by
+//! `rust/tests/prop_autotune.rs` and ARCHITECTURE.md):
+//!
+//! 1. `SUBACCEL_TILE_ROWS` (env, read at engine construction) — a hard
+//!    override; the sweep is skipped entirely.
+//! 2. [`ConvEngine::with_tile_rows`] (constructor) — same mechanism,
+//!    same skip.
+//! 3. The autotuned decision (this module), including warm-starts from a
+//!    recorded [`TileCache`] trajectory.
+//! 4. [`tile_rows_heuristic`] — what the engine falls back to when
+//!    nothing above produced a tile.
+//!
+//! Two sweep modes, chosen by [`AutotuneBudget::repeats`]:
+//!
+//! * `repeats == 0` — **deterministic cost model**: candidates are
+//!   scored by estimated memory traffic (tap tables re-streamed once per
+//!   tile; gathers from a strip that spilled L1 are penalised). No
+//!   clocks are read, so the decision is a pure function of the layer
+//!   and budget — identical on every host, every run, every thread
+//!   count. This is the default (serving replicas must warm
+//!   deterministically).
+//! * `repeats > 0` — **measured sweep**: each candidate tile runs the
+//!   real layer on a seeded synthetic input through the real engine,
+//!   best-of-`repeats` wall time wins. Used by `benches/conv_hotpath.rs`
+//!   where the trajectory records real numbers.
+//!
+//! Numerics are never at stake: the tile only regroups independent
+//! output elements ([`crate::accel::engine`] docs), so *any* decision is
+//! bit-identical to any other — the sweep can be greedy, noisy, or
+//! cached without perturbing a single logit.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::engine::{tile_rows_heuristic, ConvEngine, ConvGeometry, PackedPairing};
+use crate::tensor::im2col_shape;
+use crate::util::{json_field_f64, JsonReport, Rng};
+
+/// Bounds for one autotune sweep. `Default` is the deterministic
+/// cost-model mode; [`AutotuneBudget::measured`] turns on timing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutotuneBudget {
+    /// Maximum candidate tiles scored per conv layer (the candidate
+    /// ladder is truncated toward the heuristic seed when longer).
+    pub candidates: usize,
+    /// Timed repeats per candidate; `0` selects the deterministic cost
+    /// model (no clocks, no synthetic input).
+    pub repeats: usize,
+    /// Batch size of the synthetic input timed in measured mode
+    /// (clamped to the plan's batch; small keeps warm-up cheap).
+    pub sample_batch: usize,
+    /// Seed for the synthetic input. Fixed seed + fixed budget ⇒ the
+    /// sweep itself is reproducible (modulo wall-clock noise in
+    /// measured mode — which never affects correctness, only the tile).
+    pub seed: u64,
+}
+
+impl Default for AutotuneBudget {
+    fn default() -> Self {
+        Self { candidates: 5, repeats: 0, sample_batch: 1, seed: 0xA070_707E }
+    }
+}
+
+impl AutotuneBudget {
+    /// Measured-sweep budget: best-of-`repeats` wall time per candidate
+    /// (`repeats` is clamped to ≥ 1 — a measured sweep must measure).
+    pub fn measured(repeats: usize) -> Self {
+        Self { repeats: repeats.max(1), ..Self::default() }
+    }
+}
+
+/// Where a layer's tile came from — the override-precedence rung that
+/// produced it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileSource {
+    /// `SUBACCEL_TILE_ROWS` or [`ConvEngine::with_tile_rows`]: the
+    /// engine-wide hard override. The sweep was skipped.
+    Override,
+    /// Loaded from a recorded [`TileCache`] trajectory entry.
+    WarmStart,
+    /// Chosen by this run's sweep (cost model or measured).
+    Autotuned,
+    /// Sweep fallback (degenerate geometry): the plain heuristic.
+    Heuristic,
+}
+
+impl TileSource {
+    /// Stable lowercase label for trajectory records.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TileSource::Override => "override",
+            TileSource::WarmStart => "warm-start",
+            TileSource::Autotuned => "autotuned",
+            TileSource::Heuristic => "heuristic",
+        }
+    }
+}
+
+/// One layer's tuning outcome, recorded in the plan and the trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileDecision {
+    /// The plan step's name (e.g. `"c1"`).
+    pub layer: String,
+    /// The chosen row tile (≥ 1).
+    pub tile_rows: usize,
+    pub source: TileSource,
+    /// The winner's score: best-of-repeats nanoseconds in measured
+    /// mode, estimated traffic bytes in cost-model mode, `0.0` when no
+    /// sweep ran (override / warm-start / fallback).
+    pub score: f64,
+    /// How many candidates were scored (`0` when no sweep ran).
+    pub candidates: usize,
+}
+
+/// Candidate ladder around the heuristic seed: `{h/4, h/2, h, 2h, 4h}`
+/// clamped to `[1, rows]`, deduplicated, and truncated toward `h` when
+/// the budget allows fewer — so the heuristic itself is always in the
+/// running, and no candidate exceeds the layer's actual row count
+/// (tiles beyond `rows` all degenerate to one strip).
+pub fn candidate_tiles(seed_tile: usize, rows: usize, budget: &AutotuneBudget) -> Vec<usize> {
+    let h = seed_tile.max(1);
+    let cap = rows.max(1);
+    let mut cands: Vec<usize> =
+        [h / 4, h / 2, h, h * 2, h * 4].iter().map(|&t| t.clamp(1, cap)).collect();
+    cands.sort_unstable();
+    cands.dedup();
+    let keep = budget.candidates.max(1);
+    // drop whichever end is (multiplicatively) farther from the seed
+    while cands.len() > keep {
+        let (lo, hi) = (cands[0], cands[cands.len() - 1]);
+        // hi/h vs h/lo without division: hi·lo vs h²
+        if hi * lo >= h.clamp(1, cap) * h.clamp(1, cap) {
+            cands.pop();
+        } else {
+            cands.remove(0);
+        }
+    }
+    cands
+}
+
+/// Deterministic per-forward traffic estimate for one candidate tile,
+/// in bytes (lower is better):
+///
+/// * the tap tables (`≈ 8·taps` bytes) are re-streamed once per tile —
+///   fewer, deeper tiles amortise them;
+/// * once the strip (`4·tile·k` bytes) spills the ~24 KiB L1 budget,
+///   every gather walks L2 instead — charged as an extra pass over the
+///   `4·taps·rows` gathered bytes.
+///
+/// The two terms pull in opposite directions, which is the whole tension
+/// [`tile_rows_heuristic`] resolves blindly and this model resolves with
+/// the actual row count in hand.
+fn tile_cost(tile: usize, k_full: usize, taps: usize, rows: usize) -> f64 {
+    const L1_BYTES: f64 = 24.0 * 1024.0;
+    let tiles = ((rows + tile - 1) / tile.max(1)).max(1) as f64;
+    let table_bytes = tiles * 8.0 * taps as f64;
+    let strip_bytes = 4.0 * (tile * k_full) as f64;
+    let gather_bytes = 4.0 * taps as f64 * rows as f64;
+    let spill = if strip_bytes > L1_BYTES { 2.0 * gather_bytes } else { 0.0 };
+    table_bytes + spill
+}
+
+/// Sweep one conv layer and return its [`TileDecision`]. Infallible by
+/// design: a hard engine override short-circuits to
+/// [`TileSource::Override`], degenerate geometry falls back to
+/// [`TileSource::Heuristic`], and in measured mode a forward error on
+/// some candidate simply removes it from the running.
+///
+/// `in_shape` is the NCHW input the plan resolved for this layer; the
+/// row count it implies (`B·OH·OW`) is what the candidates are scored
+/// against.
+pub fn autotune_conv(
+    engine: &ConvEngine,
+    packed: &PackedPairing,
+    bias: &[f32],
+    geo: ConvGeometry,
+    in_shape: &[usize],
+    layer: &str,
+    budget: &AutotuneBudget,
+) -> TileDecision {
+    // Rung 1–2: env / constructor overrides are hard — no sweep.
+    if let Some(t) = engine.tile_rows() {
+        return TileDecision {
+            layer: layer.to_string(),
+            tile_rows: t,
+            source: TileSource::Override,
+            score: 0.0,
+            candidates: 0,
+        };
+    }
+
+    let heuristic = tile_rows_heuristic(packed.k_len(), packed.cout(), packed.total_taps());
+    let fallback = |score: f64| TileDecision {
+        layer: layer.to_string(),
+        tile_rows: heuristic,
+        source: TileSource::Heuristic,
+        score,
+        candidates: 0,
+    };
+
+    // Defensive geometry screen (im2col_shape panics on impossible
+    // geometry; plans never produce one, but bench callers might).
+    if in_shape.len() != 4
+        || geo.stride == 0
+        || geo.groups == 0
+        || in_shape.iter().any(|&d| d == 0)
+        || in_shape[2] + 2 * geo.pad_h < geo.kh
+        || in_shape[3] + 2 * geo.pad_w < geo.kw
+        || in_shape[1] * geo.kh * geo.kw != geo.groups * packed.k_len()
+    {
+        return fallback(0.0);
+    }
+    let s = im2col_shape(in_shape, geo.kh, geo.kw, geo.stride, geo.pad_h, geo.pad_w);
+    let cands = candidate_tiles(heuristic, s.rows, budget);
+
+    if budget.repeats == 0 {
+        // Cost-model mode: pure function of the layer — iterate the
+        // sorted ladder and keep the first strict minimum, so ties go to
+        // the smaller tile (less scratch for the same traffic).
+        let k_full = geo.groups * packed.k_len();
+        let mut best = (f64::INFINITY, heuristic);
+        let mut scored = 0;
+        for &t in &cands {
+            let c = tile_cost(t, k_full, packed.total_taps(), s.rows);
+            scored += 1;
+            if c < best.0 {
+                best = (c, t);
+            }
+        }
+        return TileDecision {
+            layer: layer.to_string(),
+            tile_rows: best.1,
+            source: TileSource::Autotuned,
+            score: best.0,
+            candidates: scored,
+        };
+    }
+
+    // Measured mode: time the real layer on a seeded synthetic input.
+    let sb = budget.sample_batch.clamp(1, in_shape[0]);
+    let xshape = [sb, in_shape[1], in_shape[2], in_shape[3]];
+    let n: usize = xshape.iter().product();
+    let mut rng = Rng::seed_from_u64(budget.seed);
+    let xd = rng.vec_range(n, -1.0, 1.0);
+    let mut out = Vec::new();
+    let mut best: Option<(f64, usize)> = None;
+    let mut scored = 0;
+    for &t in &cands {
+        // one untimed pass grows engine scratch for this tile
+        if engine
+            .forward_packed_tiled_slice_into(packed, bias, geo, &xd, &xshape, Some(t), &mut out)
+            .is_err()
+        {
+            continue;
+        }
+        let mut best_ns = f64::INFINITY;
+        for _ in 0..budget.repeats {
+            let t0 = Instant::now();
+            let _ = engine
+                .forward_packed_tiled_slice_into(packed, bias, geo, &xd, &xshape, Some(t), &mut out);
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as f64);
+        }
+        scored += 1;
+        // strict < keeps the first (smallest) tile on exact ties
+        if best.map_or(true, |(b, _)| best_ns < b) {
+            best = Some((best_ns, t));
+        }
+    }
+    match best {
+        Some((ns, t)) => TileDecision {
+            layer: layer.to_string(),
+            tile_rows: t,
+            source: TileSource::Autotuned,
+            score: ns,
+            candidates: scored,
+        },
+        None => fallback(0.0),
+    }
+}
+
+/// Recorded tile decisions, loaded from a `BENCH_8.json`-style
+/// trajectory written by [`JsonReport`] — lets a rerun warm-start from
+/// the previous run's sweep instead of re-measuring.
+/// `scripts/check.sh --smoke` wires the previous trajectory in through
+/// `SUBACCEL_AUTOTUNE_CACHE`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TileCache {
+    entries: HashMap<String, usize>,
+}
+
+impl TileCache {
+    /// Trajectory entry name for one plan step:
+    /// `autotune:<plan>:<layer>`.
+    pub fn key(plan: &str, layer: &str) -> String {
+        format!("autotune:{plan}:{layer}")
+    }
+
+    /// Parse every `autotune:*` entry out of a trajectory file. Entries
+    /// without a positive integer `tile_rows` are skipped, not errors —
+    /// the cache is an accelerant, never a requirement.
+    pub fn load(path: &str) -> std::io::Result<Self> {
+        let body = std::fs::read_to_string(path)?;
+        let mut cache = Self::default();
+        for line in body.lines() {
+            let Some(name) = entry_name(line) else { continue };
+            if !name.starts_with("autotune:") {
+                continue;
+            }
+            let Some(tile) = json_field_f64(line, "tile_rows") else { continue };
+            if tile >= 1.0 && tile.fract() == 0.0 {
+                cache.entries.insert(name.to_string(), tile as usize);
+            }
+        }
+        Ok(cache)
+    }
+
+    /// Cache from the `SUBACCEL_AUTOTUNE_CACHE` env var, when set and
+    /// readable; `None` otherwise (unset, missing file — never an
+    /// error).
+    pub fn from_env() -> Option<Self> {
+        let path = std::env::var("SUBACCEL_AUTOTUNE_CACHE").ok()?;
+        Self::load(&path).ok()
+    }
+
+    /// Record a decision directly (tests, or callers that sweep without
+    /// a trajectory file).
+    pub fn insert(&mut self, key: impl Into<String>, tile_rows: usize) {
+        assert!(tile_rows >= 1, "row tile must be at least 1");
+        self.entries.insert(key.into(), tile_rows);
+    }
+
+    pub fn get(&self, key: &str) -> Option<usize> {
+        self.entries.get(key).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append every decision to a [`JsonReport`] under its
+    /// [`TileCache::key`] name — the persistence half of the warm-start
+    /// loop.
+    pub fn record(report: &mut JsonReport, plan: &str, decisions: &[TileDecision]) {
+        for d in decisions {
+            report.push_fields(
+                &Self::key(plan, &d.layer),
+                &[
+                    ("tile_rows", d.tile_rows as f64),
+                    ("score", d.score),
+                    ("candidates", d.candidates as f64),
+                ],
+                &[("source", d.source.as_str())],
+            );
+        }
+    }
+}
+
+/// Extract the `name` field of one flat trajectory entry. The names this
+/// module writes never contain escapes, so a plain quote scan suffices.
+fn entry_name(line: &str) -> Option<&str> {
+    let k = "\"name\":\"";
+    let i = line.find(k)? + k.len();
+    let rest = &line[i..];
+    Some(&rest[..rest.find('"')?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::LayerPairing;
+    use crate::tensor::Tensor;
+    use crate::util::TempDir;
+
+    fn small_layer(rounding: f32) -> (PackedPairing, Tensor, ConvGeometry) {
+        let mut rng = Rng::seed_from_u64(11);
+        let w = Tensor::new(&[4, 3, 3, 3], rng.vec_range(4 * 27, -1.0, 1.0));
+        let b = Tensor::new(&[4], rng.vec_range(4, -1.0, 1.0));
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, rounding));
+        (p, b, ConvGeometry::valid(3, 3))
+    }
+
+    #[test]
+    fn candidate_ladder_is_seeded_clamped_and_bounded() {
+        let budget = AutotuneBudget::default();
+        let c = candidate_tiles(16, 1000, &budget);
+        assert_eq!(c, vec![4, 8, 16, 32, 64]);
+        assert!(c.len() <= budget.candidates);
+        // the row cap collapses the top of the ladder
+        let c = candidate_tiles(16, 20, &budget);
+        assert_eq!(c, vec![4, 8, 16, 20]);
+        // a tiny seed never produces zero
+        let c = candidate_tiles(1, 8, &budget);
+        assert!(c.iter().all(|&t| t >= 1));
+        assert!(c.contains(&1));
+        // truncation keeps the seed in the running
+        let tight = AutotuneBudget { candidates: 2, ..AutotuneBudget::default() };
+        let c = candidate_tiles(16, 1000, &tight);
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(&16), "{c:?}");
+    }
+
+    #[test]
+    fn cost_model_sweep_is_deterministic() {
+        let (p, b, geo) = small_layer(0.1);
+        let eng = ConvEngine::serial();
+        let budget = AutotuneBudget::default();
+        let d1 = autotune_conv(&eng, &p, b.data(), geo, &[2, 3, 12, 12], "c", &budget);
+        let d2 = autotune_conv(&eng, &p, b.data(), geo, &[2, 3, 12, 12], "c", &budget);
+        assert_eq!(d1, d2);
+        assert_eq!(d1.source, TileSource::Autotuned);
+        assert!(d1.tile_rows >= 1 && d1.candidates >= 1);
+        // independent of the engine's thread count (no clocks read)
+        let eng4 = ConvEngine::new(4).unwrap();
+        let d4 = autotune_conv(&eng4, &p, b.data(), geo, &[2, 3, 12, 12], "c", &budget);
+        assert_eq!(d1, d4);
+    }
+
+    #[test]
+    fn engine_override_short_circuits_the_sweep() {
+        let (p, b, geo) = small_layer(0.1);
+        let eng = ConvEngine::with_tile_rows(1, 9).unwrap();
+        let d = autotune_conv(&eng, &p, b.data(), geo, &[1, 3, 8, 8], "c", &AutotuneBudget::default());
+        assert_eq!(d.tile_rows, 9);
+        assert_eq!(d.source, TileSource::Override);
+        assert_eq!(d.candidates, 0);
+    }
+
+    #[test]
+    fn degenerate_geometry_falls_back_to_heuristic() {
+        let (p, b, geo) = small_layer(0.1);
+        let eng = ConvEngine::serial();
+        let budget = AutotuneBudget::default();
+        // wrong rank, zero dim, kernel larger than input, channel mismatch
+        for shape in [&[2usize, 3, 12][..], &[0, 3, 12, 12], &[1, 3, 2, 2], &[1, 5, 12, 12]] {
+            let d = autotune_conv(&eng, &p, b.data(), geo, shape, "c", &budget);
+            assert_eq!(d.source, TileSource::Heuristic, "{shape:?}");
+            assert_eq!(
+                d.tile_rows,
+                tile_rows_heuristic(p.k_len(), p.cout(), p.total_taps()),
+                "{shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn measured_sweep_picks_a_candidate() {
+        let (p, b, geo) = small_layer(0.1);
+        let eng = ConvEngine::serial();
+        let budget = AutotuneBudget::measured(1);
+        let d = autotune_conv(&eng, &p, b.data(), geo, &[2, 3, 12, 12], "c", &budget);
+        assert_eq!(d.source, TileSource::Autotuned);
+        assert!(d.candidates >= 1);
+        assert!(d.score.is_finite() && d.score > 0.0);
+        let h = tile_rows_heuristic(p.k_len(), p.cout(), p.total_taps());
+        assert!(candidate_tiles(h, 2 * 10 * 10, &budget).contains(&d.tile_rows));
+    }
+
+    #[test]
+    fn tile_cache_round_trips_through_a_trajectory() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("traj.json");
+        let p = path.to_string_lossy().to_string();
+        let mut rep = JsonReport::to_path(&p);
+        let decisions = vec![
+            TileDecision {
+                layer: "c1".into(),
+                tile_rows: 12,
+                source: TileSource::Autotuned,
+                score: 3.5e6,
+                candidates: 5,
+            },
+            TileDecision {
+                layer: "c3".into(),
+                tile_rows: 40,
+                source: TileSource::WarmStart,
+                score: 0.0,
+                candidates: 0,
+            },
+        ];
+        TileCache::record(&mut rep, "lenet5", &decisions);
+        rep.finish().unwrap();
+        let cache = TileCache::load(&p).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.get(&TileCache::key("lenet5", "c1")), Some(12));
+        assert_eq!(cache.get(&TileCache::key("lenet5", "c3")), Some(40));
+        assert_eq!(cache.get(&TileCache::key("lenet5", "c5")), None);
+        // missing files are io errors, not panics
+        assert!(TileCache::load("/nonexistent/traj.json").is_err());
+    }
+
+    #[test]
+    fn tile_cache_skips_malformed_entries() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("traj.json");
+        std::fs::write(
+            &path,
+            concat!(
+                "[\n",
+                "  {\"name\":\"alexconv2 steal\",\"ns_per_iter\":123},\n",
+                "  {\"name\":\"autotune:p:ok\",\"tile_rows\":8},\n",
+                "  {\"name\":\"autotune:p:zero\",\"tile_rows\":0},\n",
+                "  {\"name\":\"autotune:p:frac\",\"tile_rows\":2.5},\n",
+                "  {\"name\":\"autotune:p:missing\",\"score\":9}\n",
+                "]\n"
+            ),
+        )
+        .unwrap();
+        let cache = TileCache::load(&path.to_string_lossy()).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.get("autotune:p:ok"), Some(8));
+    }
+}

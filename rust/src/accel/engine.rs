@@ -12,12 +12,16 @@
 //!   instead of chasing a `Vec<FilterPairing>` of small heap blocks.
 //! * [`ConvEngine`] — a persistent std-thread worker pool (the vendored
 //!   set has no async runtime; this matches the coordinator's
-//!   thread+channel design) that shards im2col rows across cores. The
-//!   engine owns reusable scratch buffers, so a steady-state
-//!   [`ConvEngine::forward_packed_into`] call performs **zero heap
-//!   allocation**. [`ConvEngine::forward_packed_slice_into`] is the same
-//!   path on raw activation slices, for the whole-network plans in
-//!   [`crate::exec`].
+//!   thread+channel design) that distributes im2col rows across cores
+//!   through a work-stealing [`ChunkQueue`]: every engaged thread
+//!   (workers and the caller alike) claims [`steal_chunk_rows`]-sized
+//!   row chunks off one atomic cursor until the queue is dry, so
+//!   tap-heavy layers with few rows no longer idle workers behind an
+//!   even split. The engine owns reusable scratch buffers, so a
+//!   steady-state [`ConvEngine::forward_packed_into`] call performs
+//!   **zero heap allocation**. [`ConvEngine::forward_packed_slice_into`]
+//!   is the same path on raw activation slices, for the whole-network
+//!   plans in [`crate::exec`].
 //! * **Tile blocking** — each shard walks its rows in tiles of `R` rows
 //!   × all filters ([`compute_rows_tiled`]), with the filter loop on the
 //!   outside: one filter's CSR tap slices (`pair_i1/pair_i2/pair_k`,
@@ -25,8 +29,10 @@
 //!   of once per *row*. The tile's patches come from a streaming
 //!   [`im2col_rows_into`] strip (`R·k_len` floats, sized to stay
 //!   L1-resident by [`tile_rows_heuristic`]; override with
-//!   `SUBACCEL_TILE_ROWS` or [`ConvEngine::with_tile_rows`]) — the full
-//!   patch matrix is never materialised.
+//!   `SUBACCEL_TILE_ROWS`, [`ConvEngine::with_tile_rows`], or — lowest
+//!   override priority — a per-call autotuned tile from
+//!   [`crate::accel::autotune`]) — the full patch matrix is never
+//!   materialised.
 //!
 //! Numerics: every path — serial, caller shard, worker shard, any tile
 //! size — computes each output element with exactly the same reduction
@@ -37,6 +43,7 @@
 //! (tiling only regroups independent output elements; see
 //! ARCHITECTURE.md). Property-tested in `rust/tests/prop_engine.rs`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 use std::thread::JoinHandle;
@@ -294,31 +301,129 @@ pub struct PaddedTables {
     pub unp_w: Vec<f32>,
 }
 
-/// One worker's slice of a forward: a raw view of the caller's input
-/// plus geometry (each worker streams its own im2col strips from the
-/// input — patches are never pre-materialised), the shard's disjoint
-/// output region, and the caller's pairing/bias. Sound because the
-/// dispatching thread holds the engine lock and blocks on the done
-/// channel until every shard is finished, and shards write disjoint
-/// `out` regions carved with `split_at_mut`.
+/// Atomic-cursor chunk queue: one forward's im2col rows, handed out in
+/// fixed-size chunks to whoever asks next. Every engaged thread — the
+/// `threads − 1` pool workers *and* the calling thread — loops on
+/// [`ChunkQueue::claim`] until the queue is dry, so a thread stuck on a
+/// slow chunk (cache-cold region, noisy core) never strands rows that a
+/// faster thread could take. This replaces the old even
+/// `⌈rows/threads⌉` split, whose static assignment idled workers on
+/// tap-heavy layers with few rows.
+///
+/// Guarantees (pinned by `rust/tests/steal_sched.rs`):
+///
+/// * every row `0 .. rows` is covered by **exactly one** claim — the
+///   cursor is a single `fetch_add`, so two claimants can never receive
+///   overlapping ranges;
+/// * a claim is never empty — the last one is clamped to `rows`, and
+///   claims past the end return `None` (the even split's empty-tail
+///   remainder class is unrepresentable here);
+/// * a claimant that panics mid-chunk loses only its own chunk: the
+///   cursor has already moved past it, and the remaining chunks stay
+///   claimable by the surviving threads (no lock to poison).
+pub struct ChunkQueue {
+    cursor: AtomicUsize,
+    rows: usize,
+    chunk: usize,
+}
+
+impl ChunkQueue {
+    /// Queue over `rows` rows handed out `chunk` at a time
+    /// (see [`steal_chunk_rows`] for how the engine sizes chunks).
+    pub fn new(rows: usize, chunk: usize) -> Self {
+        assert!(chunk >= 1, "chunk must be at least 1");
+        Self { cursor: AtomicUsize::new(0), rows, chunk }
+    }
+
+    /// Claim the next chunk as a half-open row range `(start, end)`,
+    /// or `None` once the queue is dry. Never returns an empty range.
+    ///
+    /// `Relaxed` suffices for uniqueness — `fetch_add` on one location
+    /// is totally ordered regardless of memory order; the *results* the
+    /// claimants write are published to the dispatcher by the done
+    /// channel, not by this cursor.
+    #[inline]
+    pub fn claim(&self) -> Option<(usize, usize)> {
+        let start = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
+        if start >= self.rows {
+            return None;
+        }
+        Some((start, (start + self.chunk).min(self.rows)))
+    }
+
+    /// Total rows the queue hands out.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Rows per claim (the last claim may be shorter, never empty).
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Number of claims a full drain performs.
+    pub fn n_chunks(&self) -> usize {
+        if self.rows == 0 {
+            0
+        } else {
+            (self.rows + self.chunk - 1) / self.chunk
+        }
+    }
+}
+
+/// Chunk size for one forward's [`ChunkQueue`]: aim for ~4 claims per
+/// engaged thread (enough granularity to rebalance around a slow thread
+/// without hammering the shared cursor), snapped to whole row tiles so
+/// in-chunk tiling stays full-depth — except when rows are scarce, where
+/// sub-tile chunks keep every core fed (a 6-row layer on 8 threads hands
+/// out 6 single-row chunks rather than one 6-row chunk).
+pub fn steal_chunk_rows(rows: usize, tile: usize, threads: usize) -> usize {
+    const CLAIMS_PER_THREAD: usize = 4;
+    let denom = threads.max(1) * CLAIMS_PER_THREAD;
+    let target = ((rows + denom - 1) / denom).max(1);
+    let tile = tile.max(1);
+    if target <= tile {
+        target
+    } else {
+        let tiles_per_chunk = (target + tile - 1) / tile;
+        tiles_per_chunk * tile
+    }
+}
+
+/// One worker's view of a forward: a raw view of the caller's input plus
+/// geometry (each worker streams its own im2col strips from the input —
+/// patches are never pre-materialised), the shared [`ChunkQueue`], the
+/// *whole* row-major output region, and the caller's pairing/bias. The
+/// worker claims row chunks off the queue and writes only
+/// `out[start·cout .. end·cout]` for each claim.
+///
+/// Sound because (a) the dispatching thread holds the engine lock and
+/// blocks on the done channel until every engaged worker has drained the
+/// queue and acknowledged, so every raw view outlives its use; and
+/// (b) claims are disjoint by the queue's single-`fetch_add` contract,
+/// so no two threads ever write the same output element (the caller's
+/// own writes go through the same claim protocol).
 struct Shard {
     x: *const f32,
     x_len: usize,
     shape: [usize; 4],
     geo: ConvGeometry,
-    /// First global im2col row of this shard (rows ordered `(b, oy, ox)`).
-    row0: usize,
+    /// The forward's shared chunk queue (lives on the dispatcher's
+    /// stack for the duration of the forward).
+    queue: *const ChunkQueue,
+    /// Base of the full `(rows, cout)` row-major output region.
     out: *mut f32,
     out_len: usize,
+    cout: usize,
     packed: *const PackedPairing,
     bias: *const f32,
     bias_len: usize,
-    /// Row tile size, fixed per forward so all shards block identically.
+    /// Row tile size, fixed per forward so all claimants block identically.
     tile: usize,
 }
 
 // Raw pointers strip auto-Send; the dispatch protocol above restores the
-// guarantee (exclusive disjoint writes, caller outlives the shard).
+// guarantee (disjoint claimed writes, caller outlives the shard).
 unsafe impl Send for Shard {}
 
 struct Pool {
@@ -483,7 +588,39 @@ impl ConvEngine {
         xshape: &[usize],
         out: &mut Vec<f32>,
     ) -> Result<(ConvOutShape, OpCounts), SubaccelError> {
+        self.forward_packed_tiled_slice_into(packed, bias, geo, xd, xshape, None, out)
+    }
+
+    /// [`ConvEngine::forward_packed_slice_into`] with a per-call row-tile
+    /// request — the entry point for autotuned execution plans
+    /// ([`crate::accel::autotune`], [`crate::exec`]) and bench sweeps.
+    ///
+    /// Tile precedence, highest first: `SUBACCEL_TILE_ROWS` /
+    /// [`ConvEngine::with_tile_rows`] (both land in the engine-wide
+    /// override, which this call does **not** bypass), then `tile_rows`
+    /// here, then [`tile_rows_heuristic`]. `Some(0)` is a typed
+    /// [`SubaccelError::InvalidConfig`], mirroring the constructor.
+    ///
+    /// The tile only regroups independent output elements, so any value
+    /// is bit-identical to any other (`rust/tests/prop_autotune.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_packed_tiled_slice_into(
+        &self,
+        packed: &PackedPairing,
+        bias: &[f32],
+        geo: ConvGeometry,
+        xd: &[f32],
+        xshape: &[usize],
+        tile_rows: Option<usize>,
+        out: &mut Vec<f32>,
+    ) -> Result<(ConvOutShape, OpCounts), SubaccelError> {
         assert_eq!(bias.len(), packed.cout, "bias length != Cout");
+        if tile_rows == Some(0) {
+            return Err(SubaccelError::InvalidConfig {
+                field: "tile_rows",
+                reason: "row tile must be at least 1".into(),
+            });
+        }
         check_geo(packed, geo)?;
         let s = im2col_shape(xshape, geo.kh, geo.kw, geo.stride, geo.pad_h, geo.pad_w);
         if s.k != geo.groups * packed.k_len {
@@ -497,6 +634,7 @@ impl ConvEngine {
         let (rows, cout) = (s.rows, packed.cout);
         let tile = self
             .tile_rows
+            .or(tile_rows)
             .unwrap_or_else(|| tile_rows_heuristic(packed.k_len, cout, packed.total_taps()));
 
         // Poison recovery: the guarded state is pure scratch, resized and
@@ -520,42 +658,51 @@ impl ConvEngine {
                 &mut scratch.rowmajor[..],
             ),
             Some(pool) => {
-                let chunk = (rows + self.threads - 1) / self.threads;
-                let mut rest_out: &mut [f32] = &mut scratch.rowmajor[..];
+                // Work-stealing dispatch: one shared atomic-cursor queue
+                // of row chunks; workers and the calling thread all claim
+                // from it until dry, so a slow thread never strands rows.
+                let chunk = steal_chunk_rows(rows, tile, self.threads);
+                let queue = ChunkQueue::new(rows, chunk);
+                let out_len = rows * cout;
+                let out_ptr = scratch.rowmajor.as_mut_ptr();
 
-                // shard 0 stays on the calling thread
-                let take0 = chunk.min(rows);
-                let (out0, r) = std::mem::take(&mut rest_out).split_at_mut(take0 * cout);
-                rest_out = r;
-
-                // remaining shards go to the workers (≤ threads − 1 of
-                // them, since chunk = ⌈rows / threads⌉); each worker
-                // streams its own im2col strips from the shared input
-                let mut off = take0;
-                let mut sent = 0usize;
-                while off < rows {
-                    let take = chunk.min(rows - off);
-                    let (o, r) = std::mem::take(&mut rest_out).split_at_mut(take * cout);
-                    rest_out = r;
+                // Engage only as many workers as there are chunks beyond
+                // the caller's first claim — idle workers see no traffic.
+                let engaged = pool.job_txs.len().min(queue.n_chunks().saturating_sub(1));
+                for tx in &pool.job_txs[..engaged] {
                     let shard = Shard {
                         x: xd.as_ptr(),
                         x_len: xd.len(),
                         shape: xs,
                         geo,
-                        row0: off,
-                        out: o.as_mut_ptr(),
-                        out_len: o.len(),
+                        queue: &queue as *const ChunkQueue,
+                        out: out_ptr,
+                        out_len,
+                        cout,
                         packed: packed as *const PackedPairing,
                         bias: bias.as_ptr(),
                         bias_len: bias.len(),
                         tile,
                     };
-                    pool.job_txs[sent].send(shard).expect("conv-engine worker died");
-                    sent += 1;
-                    off += take;
+                    tx.send(shard).expect("conv-engine worker died");
                 }
-                compute_shard(xd, &xs, geo, 0, packed, bias, tile, &mut scratch.strip, out0);
-                for _ in 0..sent {
+                // The caller claims through the same protocol; all writes
+                // to `out_ptr` (here and in workers) derive from this one
+                // pointer over disjoint claimed ranges.
+                while let Some((r0, r1)) = queue.claim() {
+                    // Safety: claims are disjoint and in-bounds
+                    // (`r1 <= rows`), so this view never overlaps a
+                    // worker's.
+                    let o = unsafe {
+                        std::slice::from_raw_parts_mut(out_ptr.add(r0 * cout), (r1 - r0) * cout)
+                    };
+                    compute_shard(xd, &xs, geo, r0, packed, bias, tile, &mut scratch.strip, o);
+                }
+                // Blocks until every engaged worker has drained the queue
+                // and acknowledged: the queue (on this stack frame) and
+                // the input/output views outlive all worker access, and
+                // the channel recv publishes the workers' writes.
+                for _ in 0..engaged {
                     pool.done_rx.recv().expect("conv-engine worker died");
                 }
             }
@@ -681,23 +828,33 @@ fn worker_loop(rx: Receiver<Shard>, done: Sender<()>) {
     let mut strip: Vec<f32> = Vec::new();
     while let Ok(shard) = rx.recv() {
         // Safety: the dispatcher holds the engine lock and blocks until
-        // our done token arrives, so these views outlive this block; the
-        // out region is exclusively ours (split_at_mut).
+        // our done token arrives, so these views (input, bias, pairing,
+        // the queue on the dispatcher's stack, the output base) outlive
+        // this block; each claimed row range is exclusively ours by the
+        // queue's single-`fetch_add` contract, so the per-claim output
+        // view never overlaps another thread's.
         unsafe {
             let x = std::slice::from_raw_parts(shard.x, shard.x_len);
-            let out = std::slice::from_raw_parts_mut(shard.out, shard.out_len);
             let bias = std::slice::from_raw_parts(shard.bias, shard.bias_len);
-            compute_shard(
-                x,
-                &shard.shape,
-                shard.geo,
-                shard.row0,
-                &*shard.packed,
-                bias,
-                shard.tile,
-                &mut strip,
-                out,
-            );
+            let queue = &*shard.queue;
+            while let Some((r0, r1)) = queue.claim() {
+                debug_assert!(r1 * shard.cout <= shard.out_len);
+                let out = std::slice::from_raw_parts_mut(
+                    shard.out.add(r0 * shard.cout),
+                    (r1 - r0) * shard.cout,
+                );
+                compute_shard(
+                    x,
+                    &shard.shape,
+                    shard.geo,
+                    r0,
+                    &*shard.packed,
+                    bias,
+                    shard.tile,
+                    &mut strip,
+                    out,
+                );
+            }
         }
         if done.send(()).is_err() {
             break;
@@ -1213,6 +1370,102 @@ mod tests {
             let err = parse_tile_rows(bad).unwrap_err();
             assert!(err.contains("SUBACCEL_TILE_ROWS"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn per_call_tile_is_bit_identical_and_validated() {
+        let mut rng = Rng::seed_from_u64(101);
+        let x = rand_t(&mut rng, &[2, 3, 10, 10]);
+        let w = rand_t(&mut rng, &[4, 3, 3, 3]);
+        let b = rand_t(&mut rng, &[4]);
+        let p = PackedPairing::from_layer(&LayerPairing::from_weights(&w, 0.07));
+        let geo = ConvGeometry::valid(3, 3);
+        let (want, _) = ConvEngine::forward_packed_reference(&p, &b, geo, &x).unwrap();
+        for threads in [1usize, 3] {
+            let eng = ConvEngine::new(threads).unwrap();
+            let mut buf = Vec::new();
+            for tile in [None, Some(1), Some(5), Some(4096)] {
+                eng.forward_packed_tiled_slice_into(
+                    &p,
+                    b.data(),
+                    geo,
+                    x.data(),
+                    x.shape(),
+                    tile,
+                    &mut buf,
+                )
+                .unwrap();
+                assert_eq!(&buf[..], want.data(), "tile {tile:?} t={threads} diverged");
+            }
+            // a zero per-call tile is the same typed error as the
+            // constructor's
+            let err = eng
+                .forward_packed_tiled_slice_into(
+                    &p,
+                    b.data(),
+                    geo,
+                    x.data(),
+                    x.shape(),
+                    Some(0),
+                    &mut buf,
+                )
+                .unwrap_err();
+            assert!(matches!(err, SubaccelError::InvalidConfig { field: "tile_rows", .. }));
+        }
+        // an engine-wide override out-prioritises the per-call request
+        // (numerics can't distinguish them — that is the point — so this
+        // just pins that the path accepts both at once)
+        let eng = ConvEngine::with_tile_rows(2, 7).unwrap();
+        let mut buf = Vec::new();
+        eng.forward_packed_tiled_slice_into(&p, b.data(), geo, x.data(), x.shape(), Some(3), &mut buf)
+            .unwrap();
+        assert_eq!(&buf[..], want.data());
+    }
+
+    #[test]
+    fn chunk_queue_serial_drain_covers_exactly_once() {
+        for rows in [0usize, 1, 5, 12, 40] {
+            for chunk in [1usize, 3, 7, 64] {
+                let q = ChunkQueue::new(rows, chunk);
+                let mut hits = vec![0u32; rows];
+                let mut claims = 0;
+                while let Some((a, b)) = q.claim() {
+                    assert!(a < b && b <= rows, "bad claim {a}..{b} of {rows}");
+                    for h in &mut hits[a..b] {
+                        *h += 1;
+                    }
+                    claims += 1;
+                }
+                assert_eq!(claims, q.n_chunks());
+                assert!(hits.iter().all(|&h| h == 1), "rows={rows} chunk={chunk}: {hits:?}");
+                // dry queue stays dry
+                assert_eq!(q.claim(), None);
+            }
+        }
+    }
+
+    #[test]
+    fn steal_chunk_bounds() {
+        // never zero, and sub-tile only when rows are scarce
+        for rows in [1usize, 6, 100, 729, 100_000] {
+            for tile in [1usize, 2, 16, 64] {
+                for threads in [1usize, 4, 8] {
+                    let c = steal_chunk_rows(rows, tile, threads);
+                    assert!(c >= 1);
+                    if c > tile {
+                        // super-tile chunks are whole tiles
+                        assert_eq!(c % tile, 0, "rows={rows} tile={tile} t={threads}");
+                    }
+                }
+            }
+        }
+        // few rows, many threads: single-row chunks engage every core
+        assert_eq!(steal_chunk_rows(6, 16, 8), 1);
+        // plentiful rows: about 4 claims per thread, tile-aligned
+        let c = steal_chunk_rows(729, 2, 8);
+        assert_eq!(c % 2, 0);
+        let claims = (729 + c - 1) / c;
+        assert!((16..=64).contains(&claims), "claims={claims}");
     }
 
     #[test]

@@ -11,13 +11,20 @@
 //! * [`engine`] — the execution engine behind [`subconv`]: the
 //!   structure-of-arrays [`PackedPairing`] layout and the multi-threaded
 //!   [`ConvEngine`] worker pool, running a tile-blocked microkernel fed
-//!   by streaming im2col strips (zero steady-state allocation;
-//!   bit-identical across thread counts and tile sizes).
+//!   by streaming im2col strips over a work-stealing [`ChunkQueue`]
+//!   (zero steady-state allocation; bit-identical across thread counts
+//!   and tile sizes).
+//! * [`autotune`] — one-shot bounded row-tile sweep run at plan-warm
+//!   time: picks each conv layer's tile from measured candidates (or a
+//!   deterministic cost model), honours the engine's
+//!   `SUBACCEL_TILE_ROWS`/`with_tile_rows` hard overrides, and
+//!   warm-starts from decisions persisted in the bench trajectory.
 //! * [`opcount`] — Table-1 accounting over a whole model for a rounding
 //!   sweep.
 //! * [`stats`] — weight-distribution statistics (Fig 3 / Fig 4).
 
 mod ablation;
+pub mod autotune;
 mod engine;
 mod opcount;
 mod preprocess;
@@ -25,8 +32,12 @@ mod stats;
 mod subconv;
 
 pub use ablation::{pair_filter_closest_first, total_snap_error};
+pub use autotune::{
+    autotune_conv, candidate_tiles, AutotuneBudget, TileCache, TileDecision, TileSource,
+};
 pub use engine::{
-    tile_rows_heuristic, ConvEngine, ConvGeometry, ConvOutShape, PackedPairing, PaddedTables,
+    steal_chunk_rows, tile_rows_heuristic, ChunkQueue, ConvEngine, ConvGeometry, ConvOutShape,
+    PackedPairing, PaddedTables,
 };
 pub use opcount::{model_op_sweep, model_ops, ModelOps, TABLE1_ROUNDINGS};
 pub use preprocess::{pair_filter, FilterPairing, LayerPairing, WeightClass};

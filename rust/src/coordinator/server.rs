@@ -15,7 +15,7 @@
 //! `QueueFull` backpressure from `BadShape` rejections.
 
 use super::batcher::{BatchPlan, Batcher};
-use crate::accel::ConvEngine;
+use crate::accel::{AutotuneBudget, ConvEngine};
 use crate::data::load_weights;
 use crate::error::SubaccelError;
 use crate::metrics::ServerMetrics;
@@ -56,6 +56,7 @@ pub struct ServeConfig {
     rounding: f32,
     workers: usize,
     engine_threads: usize,
+    autotune: bool,
 }
 
 impl Default for ServeConfig {
@@ -69,6 +70,7 @@ impl Default for ServeConfig {
             rounding: 0.0,
             workers: 1,
             engine_threads: 1,
+            autotune: true,
         }
     }
 }
@@ -115,6 +117,12 @@ impl ServeConfig {
     /// Engine threads per replica (CPU backend only).
     pub fn engine_threads(&self) -> usize {
         self.engine_threads
+    }
+
+    /// Run the plan-warm row-tile sweep while pre-warming CPU replicas
+    /// (CPU backend only; the default). Off = static heuristic tiles.
+    pub fn autotune(&self) -> bool {
+        self.autotune
     }
 }
 
@@ -169,6 +177,11 @@ impl ServeConfigBuilder {
 
     pub fn engine_threads(mut self, n: usize) -> Self {
         self.cfg.engine_threads = n;
+        self
+    }
+
+    pub fn autotune(mut self, on: bool) -> Self {
+        self.cfg.autotune = on;
         self
     }
 
@@ -436,9 +449,16 @@ fn worker_loop(
                 // pre-warm one plan per padded size the batcher can emit
                 // under low load (powers of two up to the configured
                 // batch), so even deadline-flushed partial batches run
-                // allocation-free from the first request
+                // allocation-free from the first request; with autotune on
+                // (default) the warm also sweeps row tiles per conv layer
+                // — deterministic cost-model mode, so every replica lands
+                // on the same tiles
                 for b in Batcher::new(cfg.batch_size, cfg.max_wait).padded_sizes() {
-                    cpu.warm(b)?;
+                    if cfg.autotune {
+                        cpu.warm_autotuned(b, &AutotuneBudget::default(), None)?;
+                    } else {
+                        cpu.warm(b)?;
+                    }
                 }
                 WorkerExec::Cpu(cpu)
             }
@@ -588,6 +608,7 @@ mod tests {
             .rounding(0.25)
             .workers(2)
             .engine_threads(3)
+            .autotune(false)
             .build()
             .unwrap();
         assert_eq!(c.artifacts_dir(), &PathBuf::from("somewhere"));
@@ -598,6 +619,9 @@ mod tests {
         assert_eq!(c.rounding(), 0.25);
         assert_eq!(c.workers(), 2);
         assert_eq!(c.engine_threads(), 3);
+        assert!(!c.autotune());
+        // autotune defaults on for CPU replicas
+        assert!(ServeConfig::default().autotune());
     }
 
     #[test]

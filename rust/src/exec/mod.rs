@@ -19,7 +19,12 @@
 //! 3. [`PlanExecutor`] — owns two ping-pong activation buffers sized by
 //!    the plan. Its `forward_into` runs the whole network on a shared
 //!    [`crate::accel::ConvEngine`] with **zero steady-state heap
-//!    allocations** (proved by `rust/tests/alloc_plan.rs`).
+//!    allocations** (proved by `rust/tests/alloc_plan.rs`). Warming via
+//!    [`PlanExecutor::warm_autotuned`] additionally runs the one-shot
+//!    row-tile sweep ([`crate::accel::autotune`]) and pins each conv
+//!    step's winning tile in the plan — all tuning cost and allocation
+//!    lands at warm time, and the decision is recorded so trajectory
+//!    reruns can warm-start instead of re-sweeping.
 //!
 //! All three serving paths — [`crate::nn::PairedModel`],
 //! [`crate::runtime::PairedCpuLeNet5`], and the coordinator's

@@ -5,7 +5,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::{CompiledLayer, CompiledNet};
-use crate::accel::{ConvEngine, SubConv2d};
+use crate::accel::{
+    autotune_conv, AutotuneBudget, ConvEngine, SubConv2d, TileCache, TileDecision, TileSource,
+};
 use crate::error::SubaccelError;
 use crate::nn::layers::{avgpool_into, dense_into, maxpool_into, Activation};
 use crate::nn::{ForwardCounts, Model, OpCounts};
@@ -59,11 +61,28 @@ impl PlanStep {
     pub fn counts(&self) -> OpCounts {
         self.counts
     }
+
+    /// The autotuned row tile for a conv step (`None` before
+    /// [`ExecutionPlan::autotune`] ran, when the engine override made
+    /// tuning moot, or for non-conv steps). Passed to the engine as a
+    /// per-call tile on every forward.
+    pub fn tile_rows(&self) -> Option<usize> {
+        match &self.op {
+            StepOp::PairedConv { tile, .. } => *tile,
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
 enum StepOp {
-    PairedConv { unit: Arc<SubConv2d>, act: Activation },
+    PairedConv {
+        unit: Arc<SubConv2d>,
+        act: Activation,
+        /// Plan-warm autotuned row tile ([`ExecutionPlan::autotune`]);
+        /// `None` → the engine's own override/heuristic chain.
+        tile: Option<usize>,
+    },
     AvgPool { k: usize, act: Activation },
     MaxPool { k: usize, stride: usize, pad: usize, act: Activation },
     /// Pure NCHW → (N, C·H·W) relabel: row-major layout is unchanged, so
@@ -86,6 +105,9 @@ pub struct ExecutionPlan {
     /// Largest activation buffer (elements) any step reads or writes —
     /// the size of each ping-pong scratch buffer.
     max_elems: usize,
+    /// Tile decisions recorded by [`ExecutionPlan::autotune`] — `Some`
+    /// makes later autotune calls no-ops (the one-shot contract).
+    autotune: Option<Vec<TileDecision>>,
 }
 
 impl ExecutionPlan {
@@ -145,7 +167,7 @@ impl ExecutionPlan {
                         rows * cout as u64,
                     );
                     counts.activations += act_elems(*act, b * cout * oh * ow);
-                    let op = StepOp::PairedConv { unit: unit.clone(), act: *act };
+                    let op = StepOp::PairedConv { unit: unit.clone(), act: *act, tile: None };
                     (name, vec![b, cout, oh, ow], counts, op)
                 }
                 CompiledLayer::AvgPool { name, k, act } => {
@@ -252,7 +274,74 @@ impl ExecutionPlan {
             output_shape: shape,
             steps,
             max_elems,
+            autotune: None,
         })
+    }
+
+    /// One-shot bounded row-tile sweep over the plan's conv steps
+    /// ([`crate::accel::autotune`]): each step's winner is recorded in
+    /// the step (passed to the engine as a per-call tile from then on)
+    /// and returned as [`TileDecision`]s for trajectory persistence.
+    ///
+    /// Precedence per step, highest first: the engine's
+    /// `SUBACCEL_TILE_ROWS`/`with_tile_rows` hard override (sweep
+    /// skipped, step tile left unset — the engine override wins at
+    /// forward time anyway), then a [`TileCache`] warm-start hit, then
+    /// this run's sweep, then the engine heuristic.
+    ///
+    /// **Idempotent**: the first call sweeps and records; every later
+    /// call returns the recorded decisions untouched, so repeated
+    /// `warm()`s can never flap between tiles mid-serving — and since
+    /// the tile only regroups independent output elements, even a
+    /// *different* decision would be bit-identical
+    /// (`rust/tests/prop_autotune.rs`).
+    pub fn autotune(
+        &mut self,
+        engine: &ConvEngine,
+        budget: &AutotuneBudget,
+        cache: Option<&TileCache>,
+    ) -> &[TileDecision] {
+        if self.autotune.is_none() {
+            let mut decisions = Vec::new();
+            let plan_name = self.name.clone();
+            for step in &mut self.steps {
+                let StepOp::PairedConv { unit, tile, .. } = &mut step.op else { continue };
+                let cached = if engine.tile_rows().is_none() {
+                    cache.and_then(|c| c.get(&TileCache::key(&plan_name, &step.name)))
+                } else {
+                    None
+                };
+                let d = match cached {
+                    Some(t) => TileDecision {
+                        layer: step.name.clone(),
+                        tile_rows: t,
+                        source: TileSource::WarmStart,
+                        score: 0.0,
+                        candidates: 0,
+                    },
+                    None => autotune_conv(
+                        engine,
+                        unit.packed(),
+                        unit.bias().data(),
+                        unit.geometry(),
+                        &step.in_shape,
+                        &step.name,
+                        budget,
+                    ),
+                };
+                if engine.tile_rows().is_none() {
+                    *tile = Some(d.tile_rows);
+                }
+                decisions.push(d);
+            }
+            self.autotune = Some(decisions);
+        }
+        self.autotune.as_deref().unwrap_or_default()
+    }
+
+    /// The recorded tile decisions, if [`ExecutionPlan::autotune`] ran.
+    pub fn tile_decisions(&self) -> Option<&[TileDecision]> {
+        self.autotune.as_deref()
     }
 
     pub fn name(&self) -> &str {
@@ -346,6 +435,26 @@ impl PlanExecutor {
         self.spare.resize(n, 0.0);
     }
 
+    /// [`PlanExecutor::warm`] plus the one-shot row-tile autotune sweep
+    /// ([`ExecutionPlan::autotune`]). All sweep allocation happens here,
+    /// at warm time — steady-state forwards stay zero-alloc
+    /// (`rust/tests/alloc_plan.rs`). Idempotent: repeated calls reuse
+    /// the recorded decisions.
+    pub fn warm_autotuned(
+        &mut self,
+        engine: &ConvEngine,
+        budget: &AutotuneBudget,
+        cache: Option<&TileCache>,
+    ) -> &[TileDecision] {
+        self.warm();
+        self.plan.autotune(engine, budget, cache)
+    }
+
+    /// The plan's recorded tile decisions, if a sweep ran.
+    pub fn tile_decisions(&self) -> Option<&[TileDecision]> {
+        self.plan.tile_decisions()
+    }
+
     /// Run the whole network, writing logits into `out` (resized and
     /// fully overwritten); returns the output shape. Steady-state
     /// allocation-free once `out` and the scratch buffers are warm.
@@ -417,13 +526,14 @@ impl PlanExecutor {
         for (i, step) in self.plan.steps.iter().enumerate() {
             let t0 = Instant::now();
             match &step.op {
-                StepOp::PairedConv { unit, act } => {
-                    engine.forward_packed_slice_into(
+                StepOp::PairedConv { unit, act, tile } => {
+                    engine.forward_packed_tiled_slice_into(
                         unit.packed(),
                         unit.bias().data(),
                         unit.geometry(),
                         &self.cur,
                         &step.in_shape,
+                        *tile,
                         &mut self.spare,
                     )?;
                     act.apply_slice(&mut self.spare);
@@ -527,6 +637,63 @@ mod tests {
             let got = exec.infer(&eng, &x).unwrap();
             assert_eq!(got, want, "tile {tile} diverged through the plan path");
         }
+    }
+
+    #[test]
+    fn autotuned_warm_is_idempotent_and_bit_identical() {
+        let mut rng = Rng::seed_from_u64(41);
+        let x = randt(&mut rng, &[2, 1, 32, 32]);
+        let mut plain =
+            ExecutionPlan::compile(&lenet5(), 0.08, &[2, 1, 32, 32]).unwrap().into_executor();
+        let engine = ConvEngine::serial();
+        let want = plain.infer(&engine, &x).unwrap();
+
+        let mut tuned =
+            ExecutionPlan::compile(&lenet5(), 0.08, &[2, 1, 32, 32]).unwrap().into_executor();
+        assert_eq!(tuned.tile_decisions(), None);
+        let budget = AutotuneBudget::default();
+        let d1 = tuned.warm_autotuned(&engine, &budget, None).to_vec();
+        // one decision per conv step, each a real tile from this sweep
+        assert_eq!(d1.len(), 3);
+        assert!(d1.iter().all(|d| d.tile_rows >= 1 && d.source == TileSource::Autotuned));
+        let tiles: Vec<_> = tuned
+            .plan()
+            .steps()
+            .iter()
+            .filter(|s| s.name().starts_with('c'))
+            .map(|s| s.tile_rows())
+            .collect();
+        assert!(tiles.iter().all(|t| t.is_some()), "{tiles:?}");
+        // repeated warms reuse the recorded decisions (one-shot contract)
+        let d2 = tuned.warm_autotuned(&engine, &budget, None).to_vec();
+        assert_eq!(d1, d2);
+        // and the tuned plan's output is bit-identical to the untuned one
+        let got = tuned.infer(&engine, &x).unwrap();
+        assert_eq!(got, want, "autotuned plan diverged");
+    }
+
+    #[test]
+    fn warm_start_cache_and_override_precedence() {
+        let engine = ConvEngine::serial();
+        let budget = AutotuneBudget::default();
+        // a cache hit wins over the sweep and lands in the step
+        let mut cache = crate::accel::TileCache::default();
+        cache.insert(crate::accel::TileCache::key("lenet5", "c1"), 2);
+        let mut exe =
+            ExecutionPlan::compile(&lenet5(), 0.08, &[1, 1, 32, 32]).unwrap().into_executor();
+        let d = exe.warm_autotuned(&engine, &budget, Some(&cache)).to_vec();
+        assert_eq!(d[0].source, TileSource::WarmStart);
+        assert_eq!(d[0].tile_rows, 2);
+        assert_eq!(exe.plan().steps()[0].tile_rows(), Some(2));
+        assert!(d[1..].iter().all(|x| x.source == TileSource::Autotuned));
+        // an engine-wide override beats both cache and sweep, and the
+        // plan leaves the step tiles unset (the engine wins at forward)
+        let forced = ConvEngine::with_tile_rows(1, 7).unwrap();
+        let mut exe2 =
+            ExecutionPlan::compile(&lenet5(), 0.08, &[1, 1, 32, 32]).unwrap().into_executor();
+        let d2 = exe2.warm_autotuned(&forced, &budget, Some(&cache)).to_vec();
+        assert!(d2.iter().all(|x| x.source == TileSource::Override && x.tile_rows == 7));
+        assert!(exe2.plan().steps().iter().all(|s| s.tile_rows().is_none()));
     }
 
     #[test]

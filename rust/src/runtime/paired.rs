@@ -14,7 +14,7 @@
 //!   executors, so the steady-state loop is allocation-free.
 
 use super::{tensor_to_literal, Executable, Runtime};
-use crate::accel::{ConvEngine, LayerPairing, PackedPairing};
+use crate::accel::{AutotuneBudget, ConvEngine, LayerPairing, PackedPairing, TileCache, TileDecision};
 use crate::exec::{CompiledNet, PlanExecutor};
 use crate::nn::lenet5_try_from_params;
 use crate::nn::params::{bias_key, weight_key};
@@ -189,6 +189,22 @@ impl PairedCpuLeNet5 {
     pub fn warm(&mut self, batch: usize) -> Result<()> {
         self.executor_for(batch)?;
         Ok(())
+    }
+
+    /// [`PairedCpuLeNet5::warm`] plus the one-shot row-tile autotune
+    /// sweep per conv layer ([`crate::accel::autotune`]): all sweep cost
+    /// lands here, before traffic, and the decisions stick for the plan's
+    /// lifetime. Returns the per-layer decisions (for logging or
+    /// trajectory persistence). Idempotent per batch size.
+    pub fn warm_autotuned(
+        &mut self,
+        batch: usize,
+        budget: &AutotuneBudget,
+        cache: Option<&TileCache>,
+    ) -> Result<Vec<TileDecision>> {
+        let engine = Arc::clone(&self.engine);
+        let exe = self.executor_for(batch)?;
+        Ok(exe.warm_autotuned(&engine, budget, cache).to_vec())
     }
 
     fn executor_for(&mut self, batch: usize) -> Result<&mut PlanExecutor> {

@@ -157,6 +157,28 @@ impl JsonReport {
         self.entries.push(e);
     }
 
+    /// Record a standalone metadata entry with no timing attached —
+    /// numeric fields plus string fields. This is how non-bench
+    /// decisions ride the trajectory: the plan-warm autotuner persists
+    /// each layer's chosen row tile as an
+    /// `{"name":"autotune:<plan>:<layer>","tile_rows":…,"source":"…"}`
+    /// entry that a later run can warm-start from
+    /// ([`crate::accel::autotune::TileCache`]).
+    pub fn push_fields(&mut self, name: &str, nums: &[(&str, f64)], strs: &[(&str, &str)]) {
+        if self.path.is_none() {
+            return;
+        }
+        let mut e = format!("{{\"name\":\"{}\",\"smoke\":{}", json_escape(name), smoke());
+        for (key, v) in nums {
+            e.push_str(&format!(",\"{}\":{}", json_escape(key), json_f64(*v)));
+        }
+        for (key, v) in strs {
+            e.push_str(&format!(",\"{}\":\"{}\"", json_escape(key), json_escape(v)));
+        }
+        e.push('}');
+        self.entries.push(e);
+    }
+
     /// Write the collected records as a JSON array; returns the path
     /// written, or `None` when disabled.
     pub fn finish(&self) -> std::io::Result<Option<&str>> {
@@ -169,6 +191,34 @@ impl JsonReport {
             }
         }
     }
+}
+
+/// Extract one numeric field from a single flat [`JsonReport`] entry
+/// (the reports are written one object per line, so callers scan lines).
+/// Only handles the report's own output shape — bare numbers, no nesting.
+pub fn json_field_f64(entry: &str, key: &str) -> Option<f64> {
+    let k = format!("\"{key}\":");
+    let i = entry.find(&k)? + k.len();
+    let rest = &entry[i..];
+    let end = rest.find(|c| c == ',' || c == '}').unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// Look up the entry named `name` in a trajectory file written by
+/// [`JsonReport::finish`] and return `(ns_per_iter, smoke)` — the
+/// regression gate in `benches/conv_hotpath.rs` compares a fresh run
+/// against the recorded baseline with this (skipping smoke-mode
+/// baselines, whose single-iteration numbers prove shape, not speed).
+pub fn baseline_ns(path: &str, name: &str) -> Option<(f64, bool)> {
+    let body = std::fs::read_to_string(path).ok()?;
+    let needle = format!("\"name\":\"{}\"", json_escape(name));
+    for line in body.lines() {
+        if line.contains(&needle) {
+            let ns = json_field_f64(line, "ns_per_iter")?;
+            return Some((ns, line.contains("\"smoke\":true")));
+        }
+    }
+    None
 }
 
 fn json_escape(s: &str) -> String {
@@ -241,6 +291,40 @@ mod tests {
         let r = bench("noop", 0, 1, || 0u32);
         rep.push(&r, &[("ops", 1.0)]);
         assert_eq!(rep.finish().unwrap(), None);
+    }
+
+    #[test]
+    fn push_fields_and_baseline_lookup_round_trip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("traj.json");
+        let p = path.to_string_lossy().to_string();
+        let mut rep = JsonReport::to_path(&p);
+        let r = bench("alexconv2 steal", 0, 2, || 1u32);
+        rep.push(&r, &[("threads", 4.0)]);
+        rep.push_fields(
+            "autotune:lenet5:c1",
+            &[("tile_rows", 16.0), ("score", 1234.5)],
+            &[("source", "autotuned")],
+        );
+        rep.finish().unwrap();
+        // the timed entry is found by exact name with its smoke flag
+        let (ns, smoked) = baseline_ns(&p, "alexconv2 steal").expect("entry present");
+        assert!(ns >= 0.0);
+        assert_eq!(smoked, smoke());
+        // prefix names don't alias ("alexconv2 steal" != "alexconv2")
+        assert_eq!(baseline_ns(&p, "alexconv2"), None);
+        // the fields-only entry carries its numbers and strings
+        let body = std::fs::read_to_string(&p).unwrap();
+        let line = body
+            .lines()
+            .find(|l| l.contains("\"name\":\"autotune:lenet5:c1\""))
+            .expect("autotune entry present");
+        assert_eq!(json_field_f64(line, "tile_rows"), Some(16.0));
+        assert_eq!(json_field_f64(line, "score"), Some(1234.5));
+        assert!(line.contains("\"source\":\"autotuned\""), "{line}");
+        // absent keys and absent files are None, not panics
+        assert_eq!(json_field_f64(line, "nope"), None);
+        assert_eq!(baseline_ns("/nonexistent/path.json", "x"), None);
     }
 
     #[test]

@@ -9,7 +9,10 @@ mod proptest;
 mod rng;
 mod tempdir;
 
-pub use bench::{bench, header as bench_header, smoke as bench_smoke, BenchResult, JsonReport};
+pub use bench::{
+    baseline_ns, bench, header as bench_header, json_field_f64, smoke as bench_smoke, BenchResult,
+    JsonReport,
+};
 pub use proptest::{forall, Gen};
 pub use rng::Rng;
 pub use tempdir::TempDir;

@@ -7,12 +7,15 @@
 //! process-global — so this test lives alone in its own integration-test
 //! binary. Runs on [`ConvEngine::serial`]: the multi-threaded path hands
 //! row shards to workers through channels, which allocate per send by
-//! design (that cost is the pool's, not the plan's).
+//! design (that cost is the pool's, not the plan's; the stealing chunk
+//! queue itself lives on the dispatcher's stack and allocates nothing).
+//! Also covers the autotuned warm path: the tile sweep allocates at warm
+//! time only, and the steady state it pins stays allocation-free.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use subaccel::accel::ConvEngine;
+use subaccel::accel::{AutotuneBudget, ConvEngine};
 use subaccel::exec::ExecutionPlan;
 use subaccel::nn::lenet5;
 use subaccel::tensor::Tensor;
@@ -49,19 +52,30 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 #[test]
 fn steady_state_forward_into_allocates_nothing() {
-    // Two single-threaded engines: the per-layer tile heuristic, and a
+    // Three single-threaded engines: the per-layer tile heuristic, a
     // forced 3-row tile — the latter refills the streaming im2col strip
     // many times per layer, proving strip reuse (not just strip growth)
-    // is allocation-free. One test fn on purpose: the allocation counter
-    // is process-global, and parallel test threads would corrupt the
-    // before/after diffs.
-    for (label, engine) in [
-        ("heuristic tile", ConvEngine::serial()),
-        ("forced tile=3", ConvEngine::with_tile_rows(1, 3).unwrap()),
+    // is allocation-free — and an autotuned warm: the measured tile
+    // sweep may allocate freely (it runs at warm time, where the plan's
+    // zero-alloc contract does not apply), but the steady state it
+    // leaves behind must still allocate nothing. One test fn on purpose:
+    // the allocation counter is process-global, and parallel test
+    // threads would corrupt the before/after diffs.
+    for (label, engine, autotuned) in [
+        ("heuristic tile", ConvEngine::serial(), false),
+        ("forced tile=3", ConvEngine::with_tile_rows(1, 3).unwrap(), false),
+        ("autotuned warm", ConvEngine::serial(), true),
     ] {
         let plan = ExecutionPlan::compile(&lenet5(), 0.05, &[2, 1, 32, 32]).unwrap();
         let mut exe = plan.into_executor();
-        exe.warm();
+        if autotuned {
+            // measured mode so the sweep exercises the real (allocating)
+            // timing path, not just the cost model
+            let decisions = exe.warm_autotuned(&engine, &AutotuneBudget::measured(1), None);
+            assert!(!decisions.is_empty(), "[{label}] sweep produced no decisions");
+        } else {
+            exe.warm();
+        }
         let x = Tensor::full(&[2, 1, 32, 32], 0.3);
         let mut out = Vec::new();
         // warm-up: grows `out` and the engine's im2col strip

@@ -1,0 +1,189 @@
+//! The work-stealing chunk queue, in isolation and under the engine.
+//!
+//! [`ChunkQueue`] is the whole scheduler: one atomic cursor handing out
+//! half-open row ranges. These tests pin its contract — every row is
+//! claimed **exactly once** (coverage bitmap, checked under real thread
+//! races), claims are never empty, a panicking claimant loses only its
+//! own chunk, and the queue stays consistent for the survivors. The
+//! engine-level tests then pin the regression class the queue fixed:
+//! the old even `⌈rows/threads⌉` split handed trailing workers empty
+//! (or missing) shards when `rows % threads != 0` or `rows < threads`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+use subaccel::accel::{steal_chunk_rows, ChunkQueue, ConvEngine, SubConv2d};
+use subaccel::tensor::Tensor;
+use subaccel::util::Rng;
+
+/// Drain `queue` from `threads` racing OS threads; returns every claim.
+fn drain_with_threads(queue: &ChunkQueue, threads: usize) -> Vec<(usize, usize)> {
+    let claims = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                while let Some(c) = queue.claim() {
+                    claims.lock().unwrap().push(c);
+                }
+            });
+        }
+    });
+    claims.into_inner().unwrap()
+}
+
+/// Every row in `0..rows` appears in exactly one claim, no claim is
+/// empty, and none reaches past `rows`.
+fn assert_exact_cover(rows: usize, claims: &[(usize, usize)]) {
+    let mut seen = vec![0u32; rows];
+    for &(a, b) in claims {
+        assert!(a < b && b <= rows, "bad claim ({a}, {b}) for {rows} rows");
+        for s in &mut seen[a..b] {
+            *s += 1;
+        }
+    }
+    for (r, &n) in seen.iter().enumerate() {
+        assert_eq!(n, 1, "row {r} claimed {n} times (want exactly once)");
+    }
+}
+
+#[test]
+fn racing_threads_claim_every_row_exactly_once() {
+    for (rows, chunk, threads) in [
+        (729, 24, 8),
+        (100, 7, 4), // remainder chunk: 100 % 7 != 0
+        (64, 64, 8), // single chunk, many threads
+        (16, 1, 16),
+        (5, 2, 3),
+    ] {
+        let queue = ChunkQueue::new(rows, chunk);
+        let claims = drain_with_threads(&queue, threads);
+        assert_exact_cover(rows, &claims);
+        assert_eq!(claims.len(), queue.n_chunks(), "rows {rows} chunk {chunk}");
+        // dry queues stay dry
+        assert_eq!(queue.claim(), None);
+    }
+}
+
+#[test]
+fn few_rows_many_threads_still_feeds_every_core_it_can() {
+    // 3 rows on 8 threads: the sizing hands out single-row chunks, so
+    // three claimants get work and the rest drain to None immediately —
+    // nobody receives an empty range (the old even-split failure mode).
+    let rows = 3;
+    let chunk = steal_chunk_rows(rows, 16, 8);
+    assert_eq!(chunk, 1, "scarce rows must go out one at a time");
+    let queue = ChunkQueue::new(rows, chunk);
+    let claims = drain_with_threads(&queue, 8);
+    assert_exact_cover(rows, &claims);
+    assert_eq!(claims.len(), 3);
+}
+
+#[test]
+fn single_chunk_serves_the_whole_range_once() {
+    // chunk larger than the row count: one claim covers everything,
+    // clamped to `rows`; every later claim (any thread) is None.
+    let queue = ChunkQueue::new(4, 8);
+    assert_eq!(queue.n_chunks(), 1);
+    assert_eq!(queue.claim(), Some((0, 4)));
+    assert_eq!(queue.claim(), None);
+    assert_eq!(queue.claim(), None, "drained queue must stay drained");
+}
+
+#[test]
+fn remainder_chunks_are_short_but_never_empty() {
+    // The regression class from the even split: whenever the row count
+    // doesn't divide evenly, the *last* claim shrinks — it never
+    // becomes empty and never spills past the end.
+    for rows in 1..50usize {
+        for chunk in 1..=rows {
+            let queue = ChunkQueue::new(rows, chunk);
+            let mut claims = Vec::new();
+            while let Some(c) = queue.claim() {
+                claims.push(c);
+            }
+            assert_exact_cover(rows, &claims);
+            let &(last0, last1) = claims.last().unwrap();
+            assert!(last1 - last0 >= 1 && last1 == rows);
+        }
+    }
+    // zero rows: nothing to claim, nothing to panic about
+    let empty = ChunkQueue::new(0, 4);
+    assert_eq!(empty.n_chunks(), 0);
+    assert_eq!(empty.claim(), None);
+}
+
+#[test]
+fn panicked_claimant_loses_only_its_chunk() {
+    let queue = ChunkQueue::new(20, 3);
+    let lost = std::cell::Cell::new(None);
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        lost.set(queue.claim());
+        panic!("worker died mid-chunk");
+    }));
+    assert!(r.is_err());
+    let lost = lost.get().expect("claim before panic succeeded");
+    // survivors drain the rest concurrently; together with the lost
+    // chunk the cover is still exact — the panic neither re-issued its
+    // chunk nor corrupted the cursor for anyone else
+    let mut claims = drain_with_threads(&queue, 4);
+    claims.push(lost);
+    assert_exact_cover(20, &claims);
+}
+
+#[test]
+fn steal_chunk_sizing_bounds() {
+    for rows in [1usize, 3, 6, 64, 729, 10_000] {
+        for tile in [1usize, 2, 16, 64] {
+            for threads in [1usize, 2, 8, 64] {
+                let c = steal_chunk_rows(rows, tile, threads);
+                assert!(c >= 1, "rows {rows} tile {tile} t{threads}");
+                // above one tile, chunks snap to whole tiles so in-chunk
+                // tiling keeps its full depth
+                if c > tile {
+                    assert_eq!(c % tile, 0, "rows {rows} tile {tile} t{threads}");
+                }
+                // enough claims to rebalance when rows are plentiful
+                if rows >= 8 * threads * tile {
+                    let claims = (rows + c - 1) / c;
+                    assert!(claims >= 2 * threads, "rows {rows} tile {tile} t{threads}: {claims}");
+                }
+            }
+        }
+    }
+}
+
+/// Engine-level regression for the even-split remainder class: row
+/// counts that used to produce empty trailing shards (`rows < threads`,
+/// `rows % threads != 0`) must run and stay bit-identical to the
+/// untiled reference under the stealing scheduler.
+#[test]
+fn awkward_row_counts_are_bit_identical_under_stealing() {
+    let mut rng = Rng::seed_from_u64(0x57EA1);
+    let e8 = ConvEngine::new(8).unwrap();
+    let e3 = ConvEngine::new(3).unwrap();
+    // (batch, cin, h, w) with a 3×3 valid conv → rows = batch·oh·ow
+    for (batch, h, w) in [
+        (2usize, 3usize, 5usize), // 6 rows on 8 threads: rows < threads
+        (5, 3, 3),                // 5 rows on 3 threads: remainder 2
+        (1, 3, 3),                // 1 row: single chunk, everyone else idle
+        (7, 4, 5),                // 42 rows on 8 threads: remainder 2
+    ] {
+        let w_t = Tensor::new(&[4, 2, 3, 3], rng.vec_range(4 * 2 * 9, -1.0, 1.0));
+        let b_t = Tensor::new(&[4], rng.vec_range(4, -0.5, 0.5));
+        let unit = SubConv2d::compile(&w_t, &b_t, 0.05);
+        let x = Tensor::new(&[batch, 2, h, w], rng.vec_range(batch * 2 * h * w, -1.0, 1.0));
+        let (want, want_counts) =
+            ConvEngine::forward_packed_reference(unit.packed(), unit.bias(), unit.geometry(), &x)
+                .unwrap();
+        for engine in [&e8, &e3] {
+            let (got, counts) = unit.forward_with(engine, &x).unwrap();
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "t={} batch {batch} {h}x{w}: diverged from reference",
+                engine.threads()
+            );
+            assert_eq!(counts, want_counts);
+        }
+    }
+}

@@ -9,6 +9,12 @@
 #             conv_hotpath also writes its machine-readable trajectory to
 #             BENCH_8.json (SUBACCEL_BENCH_JSON); records carry a
 #             "smoke":true flag marking them as shape-only data points.
+#             When a previous BENCH_8.json exists it is fed back in as
+#             both the autotune warm-start cache (SUBACCEL_AUTOTUNE_CACHE)
+#             and the perf baseline (SUBACCEL_BENCH_BASELINE): the bench
+#             runs a capped autotune sweep and fails if the chosen tile
+#             regresses conv_hotpath >10% vs the recorded trajectory
+#             entry (gate auto-skips when either side is smoke-mode).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -47,10 +53,25 @@ if [ "$smoke" = 1 ]; then
         name="$(basename "$bench" .rs)"
         echo "== bench smoke: $name =="
         if [ "$name" = conv_hotpath ]; then
-            SUBACCEL_BENCH_SMOKE=1 SUBACCEL_BENCH_JSON=BENCH_8.json \
-                cargo bench --bench "$name"
+            # env assignments go through an array + `env` because the
+            # baseline/cache vars are conditional, and `${var:+X=y}` is
+            # not parsed as an assignment prefix by the shell
+            env_args=(SUBACCEL_BENCH_SMOKE=1 SUBACCEL_BENCH_JSON=BENCH_8.json)
+            if [ -s BENCH_8.json ]; then
+                # previous trajectory: warm-start the tile sweep from it
+                # and gate the fresh autotuned number against it
+                cp BENCH_8.json BENCH_8.prev.json
+                env_args+=(SUBACCEL_BENCH_BASELINE=BENCH_8.prev.json)
+                env_args+=(SUBACCEL_AUTOTUNE_CACHE=BENCH_8.prev.json)
+            fi
+            env "${env_args[@]}" cargo bench --bench "$name"
+            rm -f BENCH_8.prev.json
             if [ ! -s BENCH_8.json ]; then
                 echo "error: conv_hotpath did not emit BENCH_8.json" >&2
+                exit 1
+            fi
+            if ! grep -q '"name":"autotune:' BENCH_8.json; then
+                echo "error: BENCH_8.json has no autotune decisions" >&2
                 exit 1
             fi
             echo "== bench trajectory: BENCH_8.json ($(wc -c <BENCH_8.json) bytes) =="
